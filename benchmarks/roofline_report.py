@@ -1,0 +1,59 @@
+"""Roofline report — aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) three-term roofline table (EXPERIMENTS.md
+§Roofline reads this)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_result, table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str = "pod"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run(fast: bool = False, mesh: str = "pod") -> dict:
+    recs = load_records(mesh)
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mode": "scan~" if r.get("scan_counted") else "unrolled",
+            "t_comp_ms": t["t_compute_s"] * 1e3,
+            "t_mem_ms": t["t_memory_s"] * 1e3,
+            "t_coll_ms": t["t_collective_s"] * 1e3,
+            "dominant": t["dominant"],
+            "useful_flops": (round(r["useful_flops_ratio"], 3)
+                             if r.get("useful_flops_ratio") else None),
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(table(rows, ["arch", "shape", "t_comp_ms", "t_mem_ms",
+                       "t_coll_ms", "dominant", "useful_flops", "mode"],
+                f"Roofline terms per (arch x shape), mesh={mesh} "
+                f"({len(rows)} compiled pairs)"))
+    by_dom = {}
+    for r in rows:
+        if r["mode"] == "unrolled":
+            by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    print("   (scan~ rows: loop body counted once by HloCostAnalysis — "
+          "they prove compile+sharding; roofline terms are lower bounds)")
+    print("   dominant-term histogram:", by_dom)
+    out = {"rows": rows, "dominant_histogram": by_dom, "mesh": mesh}
+    save_result(f"roofline_{mesh}", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

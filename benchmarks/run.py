@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure,
+plus the kernel sweeps and the roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig4_layerwise, fig5_methods, kernels_bench,
+                        roofline_report, table1_accuracy,
+                        table2_split_latency)
+
+BENCHES = [
+    ("table2_split_latency", table2_split_latency.run),
+    ("fig4_layerwise", fig4_layerwise.run),
+    ("fig5_methods", fig5_methods.run),
+    ("kernels", kernels_bench.run),
+    ("table1_accuracy", table1_accuracy.run),
+    ("roofline", roofline_report.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes/epochs for CI-style runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n######## {name} ########")
+        t0 = time.time()
+        try:
+            fn(fast=args.fast)
+            print(f"######## {name}: OK ({time.time() - t0:.1f}s)")
+        except Exception:                               # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"######## {name}: FAILED")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

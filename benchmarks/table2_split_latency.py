@@ -1,0 +1,79 @@
+"""Paper Table 2 — per-split-point collaborative-inference latency.
+
+Two parts:
+  (a) replay the paper's own measured Table 2 through Algorithm 1's greedy
+      loop — the argmin must be split 6 (the paper's optimum);
+  (b) the analytic sweep on full AlexNet under the paper's hardware profile
+      (i7 edge / 3090 server / 50 Mbps link), dense and pruned (Fig. 3
+      ratios), reporting the T_D/T_TX/T_S breakdown per candidate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                cnn_layer_costs)
+from repro.core.partition.profiles import PAPER_PROFILE
+from repro.core.partition.splitter import greedy_split
+from repro.models.cnn import alexnet_config
+
+PAPER_TABLE2_MS = {1: 99.91, 2: 166.98, 3: 65.89, 4: 85.03, 5: 31.91,
+                   6: 20.07, 7: 60.88, 8: 40.98, 9: 55.93, 10: 37.96,
+                   11: 57.79, 12: 36.11, 13: 27.96, 14: 26.34, 15: 39.15,
+                   16: 34.57, 17: 31.75, 18: 36.04, 19: 36.67, 20: 36.59}
+
+# paper Fig. 3 preserve ratios (conv1..conv5); fc unspecified -> 0.5
+PAPER_FIG3_RATIOS = {0: 1.0, 3: 0.875, 6: 0.125, 8: 0.292, 10: 0.313,
+                     14: 0.5, 16: 0.5}
+
+
+def _paper_masks(cfg):
+    import jax.numpy as jnp
+    masks = {}
+    for i, a in PAPER_FIG3_RATIOS.items():
+        spec = cfg.layers[i]
+        n = spec.out_channels or spec.features
+        m = np.zeros(n, np.float32)
+        m[:max(1, int(round(a * n)))] = 1
+        masks[i] = jnp.asarray(m)
+    return masks
+
+
+def run(fast: bool = False) -> dict:
+    # (a) Algorithm 1 on the paper's measured numbers
+    c, t = 1, PAPER_TABLE2_MS[1]
+    for j in range(2, 21):
+        if PAPER_TABLE2_MS[j] < t:
+            c, t = j, PAPER_TABLE2_MS[j]
+    print(f"   Algorithm 1 on the paper's measured Table 2: "
+          f"split={c} T={t} ms (paper: split=6, 20.07 ms)")
+    assert c == 6
+
+    # (b) analytic sweep, dense + pruned
+    cfg = alexnet_config()
+    out_tables = {}
+    for tag, masks in [("dense", None), ("pruned", _paper_masks(cfg))]:
+        costs = cnn_layer_costs(cfg, masks)
+        dec = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(cfg))
+        rows = [{"split": r["split"], "T_ms": r["T"] * 1e3,
+                 "T_D_ms": r["T_D"] * 1e3, "T_TX_ms": r["T_TX"] * 1e3,
+                 "T_S_ms": r["T_S"] * 1e3,
+                 "tx_KB": r["tx_bytes"] / 1024}
+                for r in dec.table]
+        print(table(rows[:12] + [rows[-1]],
+                    ["split", "T_ms", "T_D_ms", "T_TX_ms", "T_S_ms",
+                     "tx_KB"],
+                    f"Table 2 (analytic, {tag} AlexNet, paper profile)"))
+        print(f"   optimum: split={dec.split_point} "
+              f"T={dec.latency['T'] * 1e3:.2f} ms")
+        out_tables[tag] = {"rows": rows, "optimum": dec.split_point,
+                           "T_ms": dec.latency["T"] * 1e3}
+    out = {"paper_replay": {"split": c, "T_ms": t},
+           "analytic": out_tables}
+    save_result("table2_split_latency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

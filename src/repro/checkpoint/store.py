@@ -1,0 +1,66 @@
+"""Checkpointing: pytree <-> .npz + structure JSON (no external deps).
+
+Arrays are flattened with their tree paths as keys; the tree structure
+(dict/list/tuple/namedtuple skeleton) is stored alongside so restore
+round-trips exactly. Works for params, optimizer state, and caches.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    paths = {}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        from repro.sharding.specs import path_key
+        key = "/".join(path_key(p) for p in path)
+        paths[key] = np.asarray(leaf)
+    return paths, treedef
+
+
+def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, _ = _flatten(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    def as_np(leaf):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # numpy can't serialize ml_dtypes (bf16 etc.) — widen to fp32;
+            # restore() casts back to the template dtype
+            arr = np.asarray(leaf, np.float32)
+        return arr
+
+    np.savez(path + ".npz", **{f"a{i}": as_np(l)
+                               for i, l in enumerate(leaves)})
+    with open(path + ".json", "w") as f:
+        json.dump({"treedef": str(treedef),
+                   "n_leaves": len(leaves),
+                   "meta": metadata or {}}, f)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path + ".npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    n = len(leaves_like)
+    got = len(data.files)
+    if got != n:
+        raise ValueError(f"checkpoint has {got} leaves, template has {n}")
+    leaves = []
+    for i, tmpl in enumerate(leaves_like):
+        arr = data[f"a{i}"]
+        if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {tmpl.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=getattr(tmpl, "dtype", None)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(path + ".json") as f:
+        return json.load(f)["meta"]

@@ -1,0 +1,28 @@
+"""hubert-xlarge [arXiv:2106.07447]: 48L encoder-only, d_model=1280,
+16H (kv=16), d_ff=5120, 504 cluster-unit vocab.
+
+Bidirectional (causal=False); no decode shapes (DESIGN.md shape-skip
+table). The conv waveform frontend is STUBBED per the assignment carve-out:
+input_specs feeds precomputed frame embeddings (B, S, d_model). HuBERT's
+conv positional embedding is adapted to rope-free attention + learned
+frame embeddings (DESIGN.md hardware-adaptation notes)."""
+from repro.configs.base import ModelConfig, reduce_for_smoke
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16, num_kv_heads=16, head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    activation="gelu",
+    causal=False,
+    rope_mode="none",
+    embeds_input=True,
+    citation="[arXiv:2106.07447] HuBERT, X-Large (same arch as w2v2)",
+)
+
+
+def smoke_config():
+    return reduce_for_smoke(CONFIG)

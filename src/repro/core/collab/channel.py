@@ -1,0 +1,74 @@
+"""Bandwidth-shaped byte channels standing in for the paper's Wi-Fi hop.
+
+``SimChannel`` computes transmission time analytically (and can optionally
+sleep it away for realistic end-to-end demos). ``ShapedSocket`` wraps a real
+TCP socket with a token-bucket rate limiter, so the localhost demo in
+examples/collaborative_serve.py actually experiences ~50 Mbps.
+"""
+from __future__ import annotations
+
+import socket
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.partition.profiles import LinkProfile
+
+
+@dataclass
+class SimChannel:
+    link: LinkProfile
+    realtime: bool = False
+    sent_bytes: int = 0
+    elapsed_s: float = 0.0
+
+    def send(self, nbytes: int) -> float:
+        t = nbytes / self.link.bandwidth + self.link.rtt_s
+        self.sent_bytes += nbytes
+        self.elapsed_s += t
+        if self.realtime:
+            time.sleep(t)
+        return t
+
+
+class ShapedSocket:
+    """Token-bucket pacing on top of a connected socket (both directions)."""
+
+    def __init__(self, sock: socket.socket, link: LinkProfile,
+                 chunk: int = 16384):
+        self.sock = sock
+        self.link = link
+        self.chunk = chunk
+        self._budget = 0.0
+        self._last = time.perf_counter()
+
+    def _pace(self, nbytes: int) -> None:
+        now = time.perf_counter()
+        self._budget += (now - self._last) * self.link.bandwidth
+        self._budget = min(self._budget, self.link.bandwidth * 0.05)
+        self._last = now
+        if nbytes > self._budget:
+            need = (nbytes - self._budget) / self.link.bandwidth
+            time.sleep(need)
+            self._last = time.perf_counter()
+            self._budget = 0.0
+        else:
+            self._budget -= nbytes
+
+    def sendall(self, data: bytes) -> None:
+        for i in range(0, len(data), self.chunk):
+            piece = data[i:i + self.chunk]
+            self._pace(len(piece))
+            self.sock.sendall(piece)
+
+    def recv_exact(self, n: int) -> bytes:
+        out = bytearray()
+        while len(out) < n:
+            got = self.sock.recv(min(self.chunk, n - len(out)))
+            if not got:
+                raise EOFError("peer closed")
+            out += got
+        return bytes(out)
+
+    def close(self) -> None:
+        self.sock.close()

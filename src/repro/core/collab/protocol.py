@@ -1,0 +1,72 @@
+"""Length-prefixed tensor framing for the edge<->cloud hop (paper §3.3:
+"intermediate features are transmitted to the cloud server through the
+socket protocol").
+
+Frame layout:
+    magic  u32  = 0x52455052 ("REPR")
+    ndim   u32
+    dtype  16s  (numpy dtype str, ascii, NUL-padded)
+    shape  ndim * u64
+    nbytes u64
+    payload
+"""
+from __future__ import annotations
+
+import struct
+from typing import BinaryIO, Tuple
+
+import numpy as np
+
+MAGIC = 0x52455052
+_HDR = struct.Struct("<II16s")
+
+
+def encode_tensor(arr: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(arr)
+    dt = arr.dtype.str.encode().ljust(16, b"\0")
+    hdr = _HDR.pack(MAGIC, arr.ndim, dt)
+    shape = struct.pack(f"<{arr.ndim}Q", *arr.shape)
+    nbytes = struct.pack("<Q", arr.nbytes)
+    return hdr + shape + nbytes + arr.tobytes()
+
+
+def decode_tensor(buf: bytes) -> Tuple[np.ndarray, int]:
+    """Returns (array, bytes_consumed)."""
+    magic, ndim, dt = _HDR.unpack_from(buf, 0)
+    if magic != MAGIC:
+        raise ValueError("bad frame magic")
+    off = _HDR.size
+    shape = struct.unpack_from(f"<{ndim}Q", buf, off)
+    off += 8 * ndim
+    (nbytes,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    dtype = np.dtype(dt.rstrip(b"\0").decode())
+    arr = np.frombuffer(buf, dtype, count=nbytes // dtype.itemsize,
+                        offset=off).reshape(shape)
+    return arr, off + nbytes
+
+
+def write_tensor(fp: BinaryIO, arr: np.ndarray) -> int:
+    data = encode_tensor(arr)
+    fp.write(struct.pack("<Q", len(data)))
+    fp.write(data)
+    fp.flush()
+    return len(data) + 8
+
+
+def read_exact(fp: BinaryIO, n: int) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = fp.read(n - got)
+        if not chunk:
+            raise EOFError("peer closed")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def read_tensor(fp: BinaryIO) -> np.ndarray:
+    (n,) = struct.unpack("<Q", read_exact(fp, 8))
+    arr, _ = decode_tensor(read_exact(fp, n))
+    return arr

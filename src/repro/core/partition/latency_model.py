@@ -1,0 +1,221 @@
+"""Per-layer cost model + the collaborative-inference latency of Eq. 5:
+
+    T(c) = T_D(c) + T_TX(c) + T_S(c)
+
+Split point ``c`` means layers [0, c) run on the device and [c, N) on the
+server; c = N is device-only, c = 0 is server-only (the raw input is
+transmitted instead — the paper's 73.5 KB preprocessed tensor).
+
+Two sources of per-layer numbers:
+  * analytic — FLOPs and activation bytes from the layer specs (works for
+    CNN and transformer configs alike; drives the dry-run-scale studies);
+  * measured — wall-clock timestamps per layer (Algorithm 1 line 22), used
+    by the Tier-A reproduction on this container's CPU.
+
+Pruning feeds back into the model: masked channels shrink both FLOPs and
+transmitted activation bytes (Fig. 4 of the paper).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CNNConfig, ModelConfig
+from repro.core.partition.profiles import TwoTierProfile
+from repro.models.cnn import cnn_apply, layer_shapes
+
+
+@dataclass
+class LayerCost:
+    index: int
+    name: str
+    flops: float                # forward FLOPs for batch=1
+    out_bytes: float            # activation bytes crossing a split AFTER it
+    params_bytes: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# analytic costs: CNN
+# ---------------------------------------------------------------------------
+def cnn_layer_costs(cfg: CNNConfig,
+                    masks: Optional[Dict[int, np.ndarray]] = None,
+                    bytes_per_elem: int = 4) -> List[LayerCost]:
+    shapes = layer_shapes(cfg)
+    masks = masks or {}
+    costs = []
+    c_in = cfg.input_channels
+    keep_in = 1.0
+    flat = None
+    for i, spec in enumerate(cfg.layers):
+        keep_out = (float(np.mean(np.asarray(masks[i]))) if i in masks
+                    else 1.0)
+        if spec.kind == "conv":
+            c_out, h, w = shapes[i]
+            fl = 2.0 * h * w * c_out * c_in * spec.kernel ** 2
+            fl *= keep_in * keep_out
+            ob = h * w * c_out * keep_out * bytes_per_elem
+            pb = (spec.kernel ** 2 * c_in * c_out * keep_in * keep_out
+                  + c_out * keep_out) * bytes_per_elem
+            costs.append(LayerCost(i, f"conv{i}", fl, ob, pb))
+            c_in = c_out
+            keep_in = keep_out
+        elif spec.kind == "relu":
+            shp = shapes[i]
+            nelem = int(np.prod(shp)) * keep_in
+            costs.append(LayerCost(i, f"relu{i}", nelem,
+                                   nelem * bytes_per_elem))
+        elif spec.kind == "maxpool":
+            c, h, w = shapes[i]
+            nelem = c * h * w * keep_in
+            costs.append(LayerCost(i, f"pool{i}",
+                                   nelem * spec.kernel ** 2,
+                                   nelem * bytes_per_elem))
+        elif spec.kind == "flatten":
+            nelem = shapes[i][0] * keep_in
+            costs.append(LayerCost(i, f"flat{i}", 0.0,
+                                   nelem * bytes_per_elem))
+        elif spec.kind == "dense":
+            d_in = (flat if flat is not None else shapes[i - 1][0])
+            fl = 2.0 * d_in * spec.features * keep_in * keep_out
+            ob = spec.features * keep_out * bytes_per_elem
+            pb = (d_in * spec.features * keep_in * keep_out
+                  + spec.features * keep_out) * bytes_per_elem
+            costs.append(LayerCost(i, f"fc{i}", fl, ob, pb))
+            keep_in = keep_out
+            flat = spec.features
+    return costs
+
+
+def cnn_input_bytes(cfg: CNNConfig, bytes_per_elem: int = 4) -> float:
+    h, w = cfg.input_hw
+    return h * w * cfg.input_channels * bytes_per_elem
+
+
+# ---------------------------------------------------------------------------
+# analytic costs: transformer (per decoder layer, batch=1)
+# ---------------------------------------------------------------------------
+def transformer_layer_costs(cfg: ModelConfig, seq_len: int,
+                            bytes_per_elem: int = 2,
+                            decode: bool = False) -> List[LayerCost]:
+    """Uniform per-layer cost; embedding/head folded into first/last."""
+    d = cfg.d_model
+    S = 1 if decode else seq_len
+    ctx = seq_len
+    costs = []
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        fl = 0.0
+        if kind in ("attn", "attn_dense", "moe"):
+            if cfg.attention == "mla":
+                m = cfg.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                proj = (d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk
+                        + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                        + m.kv_lora_rank * cfg.num_heads
+                        * (m.qk_nope_head_dim + m.v_head_dim)
+                        + cfg.num_heads * m.v_head_dim * d)
+                att = cfg.num_heads * ctx * (qk + m.v_head_dim)
+            else:
+                proj = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+                win = min(ctx, cfg.sliding_window or ctx)
+                att = cfg.num_heads * win * 2 * cfg.head_dim
+            fl += 2.0 * S * (proj + att)
+            if kind == "moe":
+                m = cfg.moe
+                mult = 3 if cfg.activation in ("silu_glu", "geglu") else 2
+                fl += 2.0 * S * (m.top_k + m.num_shared) * d * m.d_expert * mult
+                fl += 2.0 * S * d * m.num_experts     # router
+            else:
+                mult = 3 if cfg.activation in ("silu_glu", "geglu") else 2
+                fl += 2.0 * S * d * cfg.d_ff * mult
+        elif kind == "ssm":
+            s = cfg.ssm
+            d_in = cfg.d_inner
+            proj = d * (2 * d_in + 2 * s.n_groups * s.d_state + cfg.ssm_heads)
+            ssd = d_in * s.d_state * 6
+            fl += 2.0 * S * (proj + ssd + d_in * d)
+        out_bytes = S * d * bytes_per_elem
+        costs.append(LayerCost(i, f"{kind}{i}", fl, out_bytes))
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# measured costs (Algorithm 1, line 22: "via timestamps")
+# ---------------------------------------------------------------------------
+def measure_cnn_layer_times(params, cfg: CNNConfig, x,
+                            masks=None, repeats: int = 3) -> List[float]:
+    """Wall-clock seconds per layer (jitted per-layer, CPU)."""
+    times = []
+    cur = x
+    for i in range(len(cfg.layers)):
+        fn = jax.jit(lambda v, p=params, s=i: cnn_apply(
+            p, cfg, v, masks=masks, start_layer=s, stop_layer=s + 1))
+        out = fn(cur)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(cur)
+            jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / repeats)
+        cur = out
+    return times
+
+
+def cnn_layer_output_bytes(params, cfg: CNNConfig, x, masks=None) -> List[int]:
+    """True transmitted payload per split point: nonzero (surviving) units.
+
+    Pruned channels are zeros under masked execution and are physically
+    absent after compaction, so the honest wire size excludes them
+    (paper Fig. 4 reports exactly this reduction)."""
+    _, inter = cnn_apply(params, cfg, x, masks=masks,
+                         return_intermediates=True)
+    masks = masks or {}
+    out = []
+    shapes = layer_shapes(cfg)
+    keep = 1.0
+    for i, a in enumerate(inter):
+        if i in masks:
+            keep = float(np.mean(np.asarray(masks[i])))
+        # relu/pool/flatten inherit the producer's surviving-channel ratio
+        nbytes = a.nbytes / a.shape[0] * keep if keep < 1.0 else a.nbytes / a.shape[0]
+        out.append(int(nbytes))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5: the latency of a split
+# ---------------------------------------------------------------------------
+def split_latency(costs: Sequence[LayerCost], c: int,
+                  profile: TwoTierProfile,
+                  input_bytes: float,
+                  measured_device_s: Optional[Sequence[float]] = None,
+                  measured_server_s: Optional[Sequence[float]] = None
+                  ) -> Dict[str, float]:
+    """Latency breakdown for split point c (layers [0,c) on device)."""
+    n = len(costs)
+    assert 0 <= c <= n
+
+    def seg_time(idx, comp, measured):
+        if measured is not None:
+            return sum(measured[i] for i in idx)
+        t = 0.0
+        for i in idx:
+            work = max(costs[i].flops / comp.flops_per_s,
+                       2 * costs[i].out_bytes / comp.mem_bw)
+            t += work + comp.overhead_s
+        return t
+
+    t_d = seg_time(range(c), profile.device, measured_device_s)
+    t_s = seg_time(range(c, n), profile.server, measured_server_s)
+    tx_bytes = input_bytes if c == 0 else costs[c - 1].out_bytes
+    if c == n:
+        t_tx = 0.0
+    else:
+        t_tx = tx_bytes / profile.link.bandwidth + profile.link.rtt_s
+    return {"T_D": t_d, "T_TX": t_tx, "T_S": t_s,
+            "T": t_d + t_tx + t_s, "tx_bytes": 0.0 if c == n else tx_bytes}

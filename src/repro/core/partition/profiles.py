@@ -1,0 +1,69 @@
+"""Hardware profiles for the latency model.
+
+Tier A (paper-faithful): the paper's own testbed — an i7-6700 edge box, a
+Ryzen+RTX-3090 server, ~50 Mbps Wi-Fi (§4.1-4.2). Effective throughputs are
+calibrated, not peak: CNN inference on a 4-core desktop CPU sustains a few
+tens of GFLOP/s; a 3090 on small-batch CNN inference sustains a low-single-
+digit fraction of its 35.6 TFLOP/s peak because AlexNet layers are tiny.
+
+Tier B (TPU-native): v5e chips; the "wireless" hop becomes the inter-pod ICI
+link (DESIGN.md §2). Constants per the assignment: 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ComputeProfile:
+    name: str
+    flops_per_s: float          # sustained
+    mem_bw: float               # bytes/s
+    overhead_s: float = 0.0     # per-invocation constant (kernel launch etc.)
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    name: str
+    bandwidth: float            # bytes/s
+    rtt_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class TwoTierProfile:
+    device: ComputeProfile
+    server: ComputeProfile
+    link: LinkProfile
+
+
+# --- Tier A: the paper's testbed -------------------------------------------
+PAPER_EDGE = ComputeProfile("i7-6700 (4c, 3.4GHz)", flops_per_s=45e9,
+                            mem_bw=25e9, overhead_s=2e-4)
+PAPER_SERVER = ComputeProfile("RTX 3090 (small-batch CNN)",
+                              flops_per_s=8e12, mem_bw=936e9,
+                              overhead_s=3e-4)
+PAPER_WIFI = LinkProfile("Wi-Fi ~50 Mbps", bandwidth=50e6 / 8, rtt_s=4e-3)
+PAPER_PROFILE = TwoTierProfile(PAPER_EDGE, PAPER_SERVER, PAPER_WIFI)
+
+# --- Tier B: TPU v5e two-pod deployment -------------------------------------
+V5E_CHIP = ComputeProfile("TPU v5e chip", flops_per_s=197e12, mem_bw=819e9)
+V5E_POD_256 = ComputeProfile("v5e pod (256 chips)", flops_per_s=256 * 197e12,
+                             mem_bw=256 * 819e9)
+# inter-pod boundary: activations cross on ICI; a (16,16) pod face has 16
+# links of ~50 GB/s toward the neighbouring pod
+INTER_POD_ICI = LinkProfile("inter-pod ICI (16 links)", bandwidth=16 * 50e9,
+                            rtt_s=1e-6)
+TPU_TWO_POD = TwoTierProfile(V5E_POD_256, V5E_POD_256, INTER_POD_ICI)
+
+# An "edge TPU + cloud pod" asymmetric deployment (single v5e host vs pod):
+V5E_HOST_8 = ComputeProfile("v5e host (8 chips)", flops_per_s=8 * 197e12,
+                            mem_bw=8 * 819e9)
+DCN_LINK = LinkProfile("DCN 100 Gbps", bandwidth=100e9 / 8, rtt_s=1e-4)
+TPU_EDGE_CLOUD = TwoTierProfile(V5E_HOST_8, V5E_POD_256, DCN_LINK)
+
+PROFILES = {
+    "paper": PAPER_PROFILE,
+    "tpu_two_pod": TPU_TWO_POD,
+    "tpu_edge_cloud": TPU_EDGE_CLOUD,
+}

@@ -1,0 +1,73 @@
+"""Split-point selection — Algorithm 1, lines 20-27 (greedy argmin), plus a
+beyond-paper pipelined variant.
+
+``greedy_split`` is the paper's loop: evaluate T(G', j) for every candidate
+j and keep the argmin. ``balanced_split`` (Tier C, DESIGN.md §2) instead
+minimizes max(T_D, T_TX, T_S) — the steady-state bottleneck when requests
+stream and device/link/server overlap — which the paper's serial model
+cannot see.
+
+``joint_two_stage`` wires the full paper pipeline together: DDPG pruning
+first (stage 1), greedy split on the pruned network (stage 2), per Eq. 6's
+two-stage decomposition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.partition.latency_model import LayerCost, split_latency
+from repro.core.partition.profiles import TwoTierProfile
+
+
+@dataclass
+class SplitDecision:
+    split_point: int
+    latency: Dict[str, float]
+    table: List[Dict[str, float]]     # per-candidate breakdown (paper Table 2)
+
+
+def sweep_splits(costs: Sequence[LayerCost], profile: TwoTierProfile,
+                 input_bytes: float,
+                 measured_device_s: Optional[Sequence[float]] = None,
+                 measured_server_s: Optional[Sequence[float]] = None,
+                 candidates: Optional[Sequence[int]] = None
+                 ) -> List[Dict[str, float]]:
+    n = len(costs)
+    cands = list(candidates) if candidates is not None else list(range(n + 1))
+    table = []
+    for c in cands:
+        row = split_latency(costs, c, profile, input_bytes,
+                            measured_device_s, measured_server_s)
+        row["split"] = c
+        table.append(row)
+    return table
+
+
+def greedy_split(costs: Sequence[LayerCost], profile: TwoTierProfile,
+                 input_bytes: float, **kw) -> SplitDecision:
+    """Algorithm 1 lines 20-27: T_min = T(G',1); for j=2..N keep argmin."""
+    table = sweep_splits(costs, profile, input_bytes, **kw)
+    best = min(table, key=lambda r: r["T"])
+    return SplitDecision(int(best["split"]), best, table)
+
+
+def balanced_split(costs: Sequence[LayerCost], profile: TwoTierProfile,
+                   input_bytes: float, **kw) -> SplitDecision:
+    """Beyond-paper: minimize the pipeline bottleneck max(T_D, T_TX, T_S)."""
+    table = sweep_splits(costs, profile, input_bytes, **kw)
+    best = min(table, key=lambda r: max(r["T_D"], r["T_TX"], r["T_S"]))
+    return SplitDecision(int(best["split"]), best, table)
+
+
+def joint_two_stage(search_pruning: Callable[[], Sequence[float]],
+                    costs_for_ratios: Callable[[Sequence[float]],
+                                               Sequence[LayerCost]],
+                    profile: TwoTierProfile, input_bytes: float,
+                    mode: str = "greedy") -> Dict:
+    """Eq. 6 two-stage solver: S* from DRL, then c* from the split sweep."""
+    ratios = list(search_pruning())
+    costs = costs_for_ratios(ratios)
+    split = (greedy_split if mode == "greedy" else balanced_split)(
+        costs, profile, input_bytes)
+    return {"ratios": ratios, "split": split}

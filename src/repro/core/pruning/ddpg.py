@@ -1,0 +1,165 @@
+"""DDPG agent for layer-wise sparsity search (paper §3.2, Eqs. 2-4).
+
+Actor and critic are 2x300-unit MLPs (paper §4.2). The critic target is the
+baseline-subtracted one-step return of Eq. 3 with gamma = 1; exploration uses
+truncated-normal noise around the actor output (Eq. 4) with sigma_0 = 0.5
+decaying exponentially after a warm-up number of episodes (paper: 100).
+
+Pure JAX: networks are pytrees, updates are jitted; the replay buffer is a
+small numpy ring (paper: 500 transitions).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN = 300
+ACTION_LO, ACTION_HI = 0.05, 1.0     # a in (0, 1]
+
+
+def _mlp_init(key, sizes):
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (i, o) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (i, o), jnp.float32) * math.sqrt(2.0 / i)
+        params.append({"w": w, "b": jnp.zeros((o,), jnp.float32)})
+    return params
+
+
+def _mlp_apply(params, x, final_act=None):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act else x
+
+
+def actor_apply(params, state):
+    """state (..., S) -> action in (0, 1]."""
+    a = _mlp_apply(params, state, jax.nn.sigmoid)[..., 0]
+    return ACTION_LO + (ACTION_HI - ACTION_LO) * a
+
+
+def critic_apply(params, state, action):
+    x = jnp.concatenate([state, action[..., None]], -1)
+    return _mlp_apply(params, x)[..., 0]
+
+
+class AgentState(NamedTuple):
+    actor: list
+    critic: list
+    actor_tgt: list
+    critic_tgt: list
+    actor_opt: Dict
+    critic_opt: Dict
+    step: jnp.ndarray
+
+
+def init_agent(key, state_dim: int) -> AgentState:
+    k1, k2 = jax.random.split(key)
+    actor = _mlp_init(k1, [state_dim, HIDDEN, HIDDEN, 1])
+    critic = _mlp_init(k2, [state_dim + 1, HIDDEN, HIDDEN, 1])
+    zeros = lambda tree: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p), tree)
+    adam = lambda tree: {"m": zeros(tree), "v": zeros(tree)}
+    return AgentState(actor, critic,
+                      jax.tree_util.tree_map(jnp.copy, actor),
+                      jax.tree_util.tree_map(jnp.copy, critic),
+                      adam(actor), adam(critic), jnp.zeros((), jnp.int32))
+
+
+def _adam_update(params, grads, opt, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                               opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                               opt["v"], grads)
+    t = step.astype(jnp.float32) + 1
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v}
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def agent_update(agent: AgentState, batch, baseline, gamma: float = 1.0,
+                 actor_lr: float = 1e-4, critic_lr: float = 1e-3,
+                 tau: float = 0.01) -> Tuple[AgentState, Dict]:
+    """One DDPG update on a sampled batch.
+
+    batch: dict of (B, ...) arrays: state, action, reward, next_state, done.
+    Implements Eq. 2 (critic MSE) with target Eq. 3:
+       y = (r - b) + gamma * Q'(s', mu'(s'))        (gamma = 1, paper)
+    """
+    s, a = batch["state"], batch["action"]
+    r, s2, done = batch["reward"], batch["next_state"], batch["done"]
+
+    a2 = actor_apply(agent.actor_tgt, s2)
+    q2 = critic_apply(agent.critic_tgt, s2, a2)
+    y = (r - baseline) + gamma * (1.0 - done) * q2
+
+    def critic_loss(cp):
+        q = critic_apply(cp, s, a)
+        return jnp.mean((y - q) ** 2)
+
+    closs, cgrad = jax.value_and_grad(critic_loss)(agent.critic)
+    new_critic, new_copt = _adam_update(agent.critic, cgrad,
+                                        agent.critic_opt, agent.step,
+                                        critic_lr)
+
+    def actor_loss(ap):
+        return -jnp.mean(critic_apply(new_critic, s, actor_apply(ap, s)))
+
+    aloss, agrad = jax.value_and_grad(actor_loss)(agent.actor)
+    new_actor, new_aopt = _adam_update(agent.actor, agrad, agent.actor_opt,
+                                       agent.step, actor_lr)
+
+    soft = lambda tgt, src: jax.tree_util.tree_map(
+        lambda t, p: (1 - tau) * t + tau * p, tgt, src)
+    return AgentState(new_actor, new_critic,
+                      soft(agent.actor_tgt, new_actor),
+                      soft(agent.critic_tgt, new_critic),
+                      new_aopt, new_copt, agent.step + 1), {
+        "critic_loss": closs, "actor_loss": aloss}
+
+
+def truncated_normal_action(key, mu, sigma):
+    """Eq. 4: a' ~ TN(mu, sigma^2) truncated to [ACTION_LO, ACTION_HI]."""
+    lo = (ACTION_LO - mu) / jnp.maximum(sigma, 1e-6)
+    hi = (ACTION_HI - mu) / jnp.maximum(sigma, 1e-6)
+    z = jax.random.truncated_normal(key, lo, hi)
+    return mu + sigma * z
+
+
+class ReplayBuffer:
+    """Ring buffer (paper: capacity 500)."""
+
+    def __init__(self, state_dim: int, capacity: int = 500):
+        self.capacity = capacity
+        self.n = 0
+        self.i = 0
+        self.state = np.zeros((capacity, state_dim), np.float32)
+        self.action = np.zeros((capacity,), np.float32)
+        self.reward = np.zeros((capacity,), np.float32)
+        self.next_state = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+
+    def add(self, s, a, r, s2, done):
+        j = self.i
+        self.state[j], self.action[j] = s, a
+        self.reward[j], self.next_state[j], self.done[j] = r, s2, done
+        self.i = (j + 1) % self.capacity
+        self.n = min(self.n + 1, self.capacity)
+
+    def sample(self, rng: np.random.RandomState, batch: int):
+        idx = rng.randint(0, self.n, size=batch)
+        return {"state": jnp.asarray(self.state[idx]),
+                "action": jnp.asarray(self.action[idx]),
+                "reward": jnp.asarray(self.reward[idx]),
+                "next_state": jnp.asarray(self.next_state[idx]),
+                "done": jnp.asarray(self.done[idx])}

@@ -1,0 +1,162 @@
+"""Structured pruning masks — the actuator of the DDPG policy.
+
+The paper prunes conv channels of AlexNet. The framework generalizes the
+action "keep fraction a of layer i's structured units" to every family:
+
+  CNN         conv out-channels / dense units        (the paper's case)
+  dense attn  attention heads + FFN inner channels
+  MoE         routed experts
+  SSD         ssm heads
+
+Importance ranking is L1 weight magnitude (as in AMC): the kept units are
+the top-a fraction by importance, emitted as 0/1 masks. Masked execution is
+mathematically identical to physical removal (see models/cnn.compact_params
+for the deployment-time compaction of the CNN path).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CNNConfig, ModelConfig
+from repro.models.cnn import prunable_layers
+from repro.models.transformer import layer_runs
+
+
+def _topk_mask(importance: np.ndarray, keep_ratio: float,
+               min_keep: int = 1) -> np.ndarray:
+    n = importance.shape[0]
+    k = max(min_keep, int(round(keep_ratio * n)))
+    k = min(k, n)
+    keep = np.argsort(-importance)[:k]
+    m = np.zeros(n, np.float32)
+    m[keep] = 1.0
+    return m
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper-faithful)
+# ---------------------------------------------------------------------------
+def cnn_layer_importance(params, cfg: CNNConfig, layer: int) -> np.ndarray:
+    w = np.asarray(params[f"l{layer}"]["w"], np.float32)
+    if w.ndim == 4:     # (kh, kw, cin, cout)
+        return np.abs(w).sum((0, 1, 2))
+    return np.abs(w).sum(0)      # dense (din, dout)
+
+
+def cnn_masks_from_ratios(params, cfg: CNNConfig,
+                          ratios: Dict[int, float]) -> Dict[int, jnp.ndarray]:
+    masks = {}
+    for layer, a in ratios.items():
+        imp = cnn_layer_importance(params, cfg, layer)
+        masks[layer] = jnp.asarray(_topk_mask(imp, float(a)))
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# transformer families
+# ---------------------------------------------------------------------------
+def transformer_prunable_units(cfg: ModelConfig) -> List[Dict]:
+    """One entry per (layer, axis) the agent controls, in layer order.
+
+    Each entry: {run, layer_in_run, layer, axis, n_units}.
+    """
+    units = []
+    for r_idx, run in enumerate(layer_runs(cfg)):
+        for j in range(run.count):
+            layer = run.start + j
+            if run.kind in ("attn", "attn_dense"):
+                units.append(dict(run=r_idx, layer_in_run=j, layer=layer,
+                                  axis="head_mask", n_units=cfg.num_heads))
+                units.append(dict(run=r_idx, layer_in_run=j, layer=layer,
+                                  axis="ffn_mask", n_units=cfg.d_ff))
+            elif run.kind == "moe":
+                units.append(dict(run=r_idx, layer_in_run=j, layer=layer,
+                                  axis="head_mask", n_units=cfg.num_heads))
+                units.append(dict(run=r_idx, layer_in_run=j, layer=layer,
+                                  axis="expert_mask",
+                                  n_units=cfg.moe.num_experts))
+            elif run.kind == "ssm":
+                units.append(dict(run=r_idx, layer_in_run=j, layer=layer,
+                                  axis="ssm_head_mask", n_units=cfg.ssm_heads))
+    return units
+
+
+def _axis_importance(params, cfg: ModelConfig, unit: Dict) -> np.ndarray:
+    rp = params["runs"][unit["run"]]
+    j = unit["layer_in_run"]
+    axis = unit["axis"]
+    if axis == "head_mask":
+        if cfg.attention == "mla":
+            w = np.asarray(rp["attn"]["w_uv"][j], np.float32)  # (rank, H*vd)
+            w = w.reshape(w.shape[0], cfg.num_heads, -1)
+            return np.abs(w).sum((0, 2))
+        w = np.asarray(rp["attn"]["wo"][j], np.float32)        # (H*D, d)
+        return np.abs(w.reshape(cfg.num_heads, -1)).sum(1)
+    if axis == "ffn_mask":
+        w = np.asarray(rp["mlp"]["w_down"][j], np.float32)     # (dff, d)
+        return np.abs(w).sum(1)
+    if axis == "expert_mask":
+        w = np.asarray(rp["moe"]["w_down"][j], np.float32)     # (E, de, d)
+        return np.abs(w).sum((1, 2))
+    if axis == "ssm_head_mask":
+        P = cfg.ssm.head_dim
+        w = np.asarray(rp["ssm"]["w_out"][j], np.float32)      # (d_in, d)
+        return np.abs(w.reshape(cfg.ssm_heads, P, -1)).sum((1, 2))
+    raise ValueError(axis)
+
+
+def transformer_masks_from_ratios(params, cfg: ModelConfig,
+                                  ratios: List[float],
+                                  min_keep: Optional[Dict[str, int]] = None
+                                  ) -> List[Optional[Dict[str, jnp.ndarray]]]:
+    """ratios[k] is the preserve ratio for transformer_prunable_units()[k].
+
+    Returns the per-run mask structure ``forward``/``decode_step`` accept:
+    a list (one per run) of dicts axis -> (count, n_units) stacked masks.
+    GQA head masks keep whole KV groups intact (kv-head multiples) so the
+    grouped attention layout survives pruning.
+    """
+    units = transformer_prunable_units(cfg)
+    assert len(ratios) == len(units), (len(ratios), len(units))
+    min_keep = min_keep or {}
+    runs = layer_runs(cfg)
+    out: List[Optional[Dict[str, np.ndarray]]] = []
+    for r_idx, run in enumerate(runs):
+        axes: Dict[str, np.ndarray] = {}
+        for unit, a in zip(units, ratios):
+            if unit["run"] != r_idx:
+                continue
+            imp = _axis_importance(params, cfg, unit)
+            if unit["axis"] == "head_mask" and cfg.attention != "mla":
+                # prune whole GQA groups: average importance per group,
+                # then expand back to heads
+                g = cfg.num_heads // cfg.num_kv_heads
+                gi = imp.reshape(cfg.num_kv_heads, g).mean(1)
+                gm = _topk_mask(gi, float(a),
+                                min_keep.get("head_mask", 1))
+                m = np.repeat(gm, g)
+            else:
+                mk = min_keep.get(unit["axis"],
+                                  cfg.moe.top_k + cfg.moe.num_shared
+                                  if unit["axis"] == "expert_mask" else 1)
+                m = _topk_mask(imp, float(a), mk)
+            axes.setdefault(unit["axis"],
+                            np.zeros((run.count, unit["n_units"]),
+                                     np.float32))[unit["layer_in_run"]] = m
+        out.append({k: jnp.asarray(v) for k, v in axes.items()} if axes
+                   else None)
+    return out
+
+
+def mask_sparsity(masks) -> float:
+    """Fraction of units removed across all masks."""
+    tot = kept = 0
+    for leaf in jax.tree_util.tree_leaves(masks):
+        arr = np.asarray(leaf)
+        tot += arr.size
+        kept += arr.sum()
+    return 1.0 - kept / max(tot, 1)

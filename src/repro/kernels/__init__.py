@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage has:
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py    — jitted public wrapper (padding, layout, defaults)
+    ref.py    — pure-jnp oracle the kernel is tested against
+
+``dispatch`` holds the global switch that routes model layers through the
+Pallas paths (interpret=True on CPU). Off by default: the XLA paths are the
+production fallback and what the dry-run lowers.
+"""
+from repro.kernels import dispatch
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.masked_matmul.ops import masked_matmul
+from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_op
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+__all__ = ["dispatch", "flash_attention", "masked_matmul", "rmsnorm_op",
+           "ssd_scan"]

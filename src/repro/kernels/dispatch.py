@@ -1,0 +1,33 @@
+"""Global Pallas dispatch switch.
+
+    from repro.kernels import dispatch
+    with dispatch.use_pallas(interpret=True):   # CPU validation
+        logits, _ = transformer.forward(...)
+
+Model layers consult ``enabled()`` / ``interpret()``; default off so every
+other path (dry-run, smoke tests, benchmarks) lowers the pure-XLA graph.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def enabled() -> bool:
+    return getattr(_state, "enabled", False)
+
+
+def interpret() -> bool:
+    return getattr(_state, "interpret", False)
+
+
+@contextlib.contextmanager
+def use_pallas(interpret: bool = False):
+    prev = (enabled(), globals()["interpret"]())
+    _state.enabled, _state.interpret = True, interpret
+    try:
+        yield
+    finally:
+        _state.enabled, _state.interpret = prev

@@ -1,0 +1,41 @@
+"""Jitted wrapper for the flash kernel: (B,S,H,D) layout conversion,
+sequence padding, block-size clamping."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Model layout in/out: q (B,Sq,H,D), k/v (B,Sk,Hkv,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                                 scale=scale, block_q=bq, block_k=bk,
+                                 seq_k=Sk, interpret=interpret)
+    if pq:
+        out = out[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel: materializing softmax
+attention with causal / sliding-window masks and GQA head grouping."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D) with H % Hkv == 0 -> (B,Sq,H,D).
+
+    Positions are 0..S-1 on both sides (self-attention; Sq == Sk assumed for
+    the masked cases)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    d = jnp.arange(Sq)[:, None] - jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    logits = jnp.where(ok, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Jitted wrapper: shape padding + batch-dim flattening for the masked GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.kernel import masked_matmul_pallas
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def masked_matmul(a: jnp.ndarray, b: jnp.ndarray, col_mask: jnp.ndarray,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                  interpret: bool = False) -> jnp.ndarray:
+    """a (..., K) @ b (K, N) * col_mask (N,) -> (..., N)."""
+    lead = a.shape[:-1]
+    K = a.shape[-1]
+    N = b.shape[1]
+    M = 1
+    for s in lead:
+        M *= s
+    a2 = a.reshape(M, K)
+    bm = min(block_m, max(M, 1))
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    a2 = _pad_to(_pad_to(a2, bm, 0), bk, 1)
+    b2 = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    m2 = _pad_to(col_mask, bn, 0)
+    out = masked_matmul_pallas(a2, b2, m2, block_m=bm, block_n=bn,
+                               block_k=bk, interpret=interpret)
+    return out[:M, :N].reshape(*lead, N)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the column-masked GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                      col_mask: jnp.ndarray) -> jnp.ndarray:
+    """a (M, K) @ b (K, N), output columns multiplied by col_mask (N,).
+
+    This is the semantics of a channel-pruned layer under masked execution:
+    pruned output channels are exactly zero (fp32 accumulation)."""
+    out = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    return (out * col_mask.astype(jnp.float32)[None, :]).astype(a.dtype)

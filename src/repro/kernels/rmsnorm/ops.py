@@ -1,0 +1,32 @@
+"""Jitted public wrapper for the fused RMSNorm kernel: arbitrary leading
+dims, row padding to the block size."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "scale_offset",
+                                             "block_rows", "interpret"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+            scale_offset: float = 0.0, block_rows: int = 256,
+            interpret: bool = False) -> jnp.ndarray:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block = min(block_rows, rows) if rows else 1
+    pad = (-rows) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm_pallas(x2, scale, eps=eps, scale_offset=scale_offset,
+                         block_rows=block, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+                scale_offset: float = 0.0) -> jnp.ndarray:
+    """x (..., d), scale (d,). fp32 math, cast back to x.dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * (1.0 / jnp.sqrt(var + eps))
+    return (y * (scale.astype(jnp.float32) + scale_offset)).astype(dtype)

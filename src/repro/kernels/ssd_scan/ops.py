@@ -1,0 +1,34 @@
+"""Jitted wrapper for the SSD kernel: sequence padding to the chunk size,
+default all-ones head mask, fp32 output state."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray,
+             head_mask: Optional[jnp.ndarray] = None,
+             chunk: int = 256, interpret: bool = False):
+    """Same contract as repro.kernels.ssd_scan.ref.ssd_ref, plus the
+    pruning head_mask epilogue."""
+    B, S, H, P = xh.shape
+    if head_mask is None:
+        head_mask = jnp.ones((H,), jnp.float32)
+    ch = min(chunk, S)
+    pad = (-S) % ch
+    if pad:
+        widths4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xh = jnp.pad(xh, widths4)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, widths4)
+        Cm = jnp.pad(Cm, widths4)
+    y, fs = ssd_scan_pallas(xh, dt, A, Bm, Cm, head_mask, chunk=ch,
+                            interpret=interpret)
+    return y[:, :S], fs

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the SSD (Mamba2) chunked-scan kernel — re-exports the
+model's reference implementation so the kernel is validated against exactly
+what the model computes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.ssm import ssd_chunked
+
+
+def ssd_ref(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int):
+    """xh (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    return ssd_chunked(xh, dt, A, Bm, Cm, chunk)

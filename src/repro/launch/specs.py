@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input shape) pair —
+weak-type-correct, shardable, zero allocation.
+
+Assigned shapes:
+    train_4k     seq 4,096    global_batch 256   (training)
+    prefill_32k  seq 32,768   global_batch 32    (inference-prefill)
+    decode_32k   seq 32,768   global_batch 128   (inference-decode)
+    long_500k    seq 524,288  global_batch 1     (long-context decode)
+
+Decode shapes mean: ONE new token against a KV cache of seq_len.
+``supported()`` encodes the DESIGN.md skip table (encoder-only has no
+decode; long_500k needs sub-quadratic or compressed-cache attention).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tr
+
+SHAPES: Dict[str, Tuple[int, int]] = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+LONG_OK = {"mamba2-2.7b", "zamba2-1.2b", "mixtral-8x7b", "deepseek-v3-671b"}
+
+
+def mode_of(shape_name: str) -> str:
+    if shape_name.startswith("train"):
+        return "train"
+    if shape_name.startswith("prefill"):
+        return "prefill"
+    return "decode"
+
+
+def supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    mode = mode_of(shape_name)
+    if mode == "decode" and not cfg.causal:
+        return False, "encoder-only: no autoregressive decode (DESIGN.md)"
+    if shape_name == "long_500k" and cfg.name not in LONG_OK:
+        return False, ("full-attention dense arch: 500k decode skipped "
+                       "(needs SSM/SWA/MLA-compressed cache; DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape_name: str,
+                    with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    S, B = SHAPES[shape_name]
+    d = jnp.dtype(cfg.dtype)
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embeds_input:
+        batch["embeds"] = _sds((B, S, cfg.d_model), d)
+    elif cfg.vision_tokens:
+        V = cfg.vision_tokens
+        batch["tokens"] = _sds((B, S - V), jnp.int32)
+        batch["vision_embeds"] = _sds((B, V, cfg.d_model), d)
+        batch["mrope_positions"] = _sds((3, B, S), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if with_labels:
+        if cfg.vision_tokens:
+            batch["labels"] = _sds((B, S - cfg.vision_tokens), jnp.int32)
+        else:
+            batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Everything the lowered step consumes, as ShapeDtypeStructs.
+
+    train   -> {params, opt_state, batch}
+    prefill -> {params, batch}
+    decode  -> {params, cache, tokens}
+    """
+    mode = mode_of(shape_name)
+    S, B = SHAPES[shape_name]
+    params = jax.eval_shape(
+        lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+    if mode == "train":
+        return {"params": params,
+                "batch": batch_specs_for(cfg, shape_name, with_labels=True)}
+    if mode == "prefill":
+        return {"params": params,
+                "batch": batch_specs_for(cfg, shape_name, with_labels=False)}
+    cache = jax.eval_shape(lambda: tr.init_cache(cfg, B, S))
+    return {"params": params, "cache": cache,
+            "tokens": _sds((B, 1), jnp.int32)}

@@ -1,0 +1,251 @@
+"""Generic CNN built from a CNNConfig layer list — AlexNet for the
+paper-faithful PlantVillage reproduction.
+
+Every op (conv / relu / pool / flatten / dense) is a *layer* in the paper's
+sense: a candidate split point for the partitioner and (for conv/dense) a
+prunable unit for the DDPG agent. ``apply`` can return every intermediate
+activation so the partitioner can read per-layer output sizes (Fig. 2 / Fig. 4
+of the paper).
+
+Channel pruning is mask-based: ``masks[i]`` is a 0/1 vector over layer i's
+output channels (conv) or units (dense). Masked channels are zeroed, which is
+mathematically identical to removing them; ``compact_params`` additionally
+*materializes* the removal (physically smaller weights) for deployment.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig, ConvLayerSpec
+
+
+def alexnet_config(num_classes: int = 38) -> CNNConfig:
+    L = ConvLayerSpec
+    return CNNConfig(
+        name="alexnet",
+        layers=(
+            L("conv", out_channels=64, kernel=11, stride=4, padding=2),   # 0
+            L("relu"),                                                    # 1
+            L("maxpool", kernel=3, stride=2),                             # 2
+            L("conv", out_channels=192, kernel=5, stride=1, padding=2),   # 3
+            L("relu"),                                                    # 4
+            L("maxpool", kernel=3, stride=2),                             # 5
+            L("conv", out_channels=384, kernel=3, stride=1, padding=1),   # 6
+            L("relu"),                                                    # 7
+            L("conv", out_channels=256, kernel=3, stride=1, padding=1),   # 8
+            L("relu"),                                                    # 9
+            L("conv", out_channels=256, kernel=3, stride=1, padding=1),   # 10
+            L("relu"),                                                    # 11
+            L("maxpool", kernel=3, stride=2),                             # 12
+            L("flatten"),                                                 # 13
+            L("dense", features=4096),                                    # 14
+            L("relu"),                                                    # 15
+            L("dense", features=4096),                                    # 16
+            L("relu"),                                                    # 17
+            L("dense", features=num_classes),                             # 18
+        ),
+        num_classes=num_classes,
+        input_hw=(224, 224),
+        citation="AlexNet (Krizhevsky et al. 2012); layer list per "
+                 "torchvision; paper Figs. 2-4 profile this network.",
+    )
+
+
+def tiny_cnn_config(num_classes: int = 38, width: float = 0.25,
+                    hw: int = 64) -> CNNConfig:
+    """Reduced AlexNet-family CNN for CPU training in tests/examples."""
+    L = ConvLayerSpec
+    w = lambda c: max(8, int(c * width))
+    return CNNConfig(
+        name="tiny_alexnet",
+        layers=(
+            L("conv", out_channels=w(64), kernel=5, stride=2, padding=2),
+            L("relu"),
+            L("maxpool", kernel=3, stride=2),
+            L("conv", out_channels=w(192), kernel=3, stride=1, padding=1),
+            L("relu"),
+            L("maxpool", kernel=3, stride=2),
+            L("conv", out_channels=w(256), kernel=3, stride=1, padding=1),
+            L("relu"),
+            L("maxpool", kernel=3, stride=2),
+            L("flatten"),
+            L("dense", features=256),
+            L("relu"),
+            L("dense", features=num_classes),
+        ),
+        num_classes=num_classes,
+        input_hw=(hw, hw),
+        citation="reduced AlexNet-family CNN (this work, CPU smoke scale)",
+    )
+
+
+# ---------------------------------------------------------------------------
+def _out_hw(hw: int, k: int, s: int, p: int) -> int:
+    return (hw + 2 * p - k) // s + 1
+
+
+def layer_shapes(cfg: CNNConfig) -> List[Tuple[int, ...]]:
+    """Output shape (C, H, W) or (F,) per layer, batch-free."""
+    h, w = cfg.input_hw
+    c = cfg.input_channels
+    shapes: List[Tuple[int, ...]] = []
+    flat = None
+    for spec in cfg.layers:
+        if spec.kind == "conv":
+            h = _out_hw(h, spec.kernel, spec.stride, spec.padding)
+            w = _out_hw(w, spec.kernel, spec.stride, spec.padding)
+            c = spec.out_channels
+            shapes.append((c, h, w))
+        elif spec.kind == "maxpool":
+            h = _out_hw(h, spec.kernel, spec.stride, 0)
+            w = _out_hw(w, spec.kernel, spec.stride, 0)
+            shapes.append((c, h, w))
+        elif spec.kind == "relu":
+            shapes.append(shapes[-1] if shapes else (c, h, w))
+        elif spec.kind == "flatten":
+            flat = c * h * w
+            shapes.append((flat,))
+        elif spec.kind == "dense":
+            flat = spec.features
+            shapes.append((flat,))
+        else:
+            raise ValueError(spec.kind)
+    return shapes
+
+
+def init_cnn_params(key, cfg: CNNConfig) -> Dict[str, Dict[str, jnp.ndarray]]:
+    dtype = jnp.dtype(cfg.dtype)
+    params: Dict[str, Dict[str, jnp.ndarray]] = {}
+    shapes = layer_shapes(cfg)
+    c_in = cfg.input_channels
+    flat_in = None
+    keys = jax.random.split(key, len(cfg.layers))
+    for i, spec in enumerate(cfg.layers):
+        if spec.kind == "conv":
+            fan_in = c_in * spec.kernel * spec.kernel
+            wshape = (spec.kernel, spec.kernel, c_in, spec.out_channels)
+            params[f"l{i}"] = {
+                "w": (jax.random.normal(keys[i], wshape, jnp.float32)
+                      * math.sqrt(2.0 / fan_in)).astype(dtype),
+                "b": jnp.zeros((spec.out_channels,), dtype),
+            }
+            c_in = spec.out_channels
+        elif spec.kind == "flatten":
+            flat_in = shapes[i][0]
+        elif spec.kind == "dense":
+            d_in = flat_in if flat_in is not None else shapes[i - 1][0]
+            params[f"l{i}"] = {
+                "w": (jax.random.normal(keys[i], (d_in, spec.features),
+                                        jnp.float32)
+                      * math.sqrt(2.0 / d_in)).astype(dtype),
+                "b": jnp.zeros((spec.features,), dtype),
+            }
+            flat_in = spec.features
+    return params
+
+
+def cnn_apply(params, cfg: CNNConfig, x: jnp.ndarray,
+              masks: Optional[Dict[int, jnp.ndarray]] = None,
+              return_intermediates: bool = False,
+              start_layer: int = 0, stop_layer: Optional[int] = None):
+    """Run layers [start_layer, stop_layer) on x.
+
+    x: (B, H, W, C) for start_layer==0, else whatever that layer expects.
+    Split inference runs [0, c) on the edge and [c, N) on the cloud.
+    """
+    masks = masks or {}
+    stop = stop_layer if stop_layer is not None else len(cfg.layers)
+    inter = []
+    for i in range(start_layer, stop):
+        spec = cfg.layers[i]
+        if spec.kind == "conv":
+            p = params[f"l{i}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (spec.stride, spec.stride),
+                [(spec.padding, spec.padding)] * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+            if i in masks:
+                x = x * masks[i].astype(x.dtype)
+        elif spec.kind == "relu":
+            x = jax.nn.relu(x)
+        elif spec.kind == "maxpool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, spec.kernel, spec.kernel, 1),
+                (1, spec.stride, spec.stride, 1), "VALID")
+        elif spec.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif spec.kind == "dense":
+            p = params[f"l{i}"]
+            x = x @ p["w"] + p["b"]
+            if i in masks:
+                x = x * masks[i].astype(x.dtype)
+        if return_intermediates:
+            inter.append(x)
+    if return_intermediates:
+        return x, inter
+    return x
+
+
+def prunable_layers(cfg: CNNConfig) -> List[int]:
+    """Indices the DDPG agent controls (conv + hidden dense, not the head)."""
+    out = [i for i, s in enumerate(cfg.layers) if s.kind == "conv"]
+    dense = [i for i, s in enumerate(cfg.layers) if s.kind == "dense"]
+    out += dense[:-1]          # never prune the classifier head
+    return out
+
+
+def compact_params(params, cfg: CNNConfig, masks: Dict[int, jnp.ndarray]):
+    """Physically remove pruned channels (deployment-time compaction).
+
+    Returns (new_params, new_cfg) where conv out_channels / dense features
+    are shrunk to the surviving counts and downstream input dims follow.
+    Conv->flatten->dense transitions expand the conv-channel mask across the
+    spatial positions of the flattened activation.
+    """
+    shapes = layer_shapes(cfg)
+    new_specs = list(cfg.layers)
+    new_params = {k: dict(v) for k, v in params.items()}
+    # keep-index per producing layer
+    carry: Optional[jnp.ndarray] = None    # input-dim keep indices
+    for i, spec in enumerate(cfg.layers):
+        if spec.kind == "conv":
+            p = new_params[f"l{i}"]
+            w = p["w"]
+            if carry is not None:
+                w = w[:, :, carry, :]
+            if i in masks:
+                keep = jnp.nonzero(masks[i] > 0)[0]
+            else:
+                keep = jnp.arange(w.shape[-1])
+            new_params[f"l{i}"] = {"w": w[..., keep], "b": p["b"][keep]}
+            new_specs[i] = ConvLayerSpec("conv", out_channels=int(keep.size),
+                                         kernel=spec.kernel,
+                                         stride=spec.stride,
+                                         padding=spec.padding)
+            carry = keep
+        elif spec.kind == "flatten":
+            if carry is not None:
+                c, h, w_ = shapes[i - 1]
+                # NHWC flatten: index = (h*W + w)*C + c
+                hw = h * w_
+                grid = (jnp.arange(hw)[:, None] * c + carry[None, :]).reshape(-1)
+                carry = grid
+        elif spec.kind == "dense":
+            p = new_params[f"l{i}"]
+            w = p["w"]
+            if carry is not None:
+                w = w[carry, :]
+            if i in masks:
+                keep = jnp.nonzero(masks[i] > 0)[0]
+            else:
+                keep = jnp.arange(w.shape[-1])
+            new_params[f"l{i}"] = {"w": w[:, keep], "b": p["b"][keep]}
+            new_specs[i] = ConvLayerSpec("dense", features=int(keep.size))
+            carry = keep if i in masks else None
+    import dataclasses as _dc
+    return new_params, _dc.replace(cfg, layers=tuple(new_specs))

@@ -1,0 +1,437 @@
+"""Attention blocks: GQA (with optional QKV bias / sliding window /
+bidirectional), and DeepSeek-style MLA with compressed latent KV cache.
+
+Two execution paths:
+  * ``chunked_attention`` — flash-style online-softmax scan over KV blocks in
+    pure jnp: O(S * block) live memory instead of O(S^2). Used for long
+    prefill and as the oracle the Pallas flash kernel is tested against.
+  * naive einsum attention for short sequences (cheaper HLO for smoke tests).
+
+Decode paths take a cache pytree and a single new token per sequence.
+Pruning hooks: an optional ``head_mask`` (num_heads,) multiplies attention
+output per head — the structured axis the DDPG pruner controls.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rmsnorm
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_gqa_params(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype),
+        "wo": _dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def init_mla_params(key, cfg, dtype):
+    m = cfg.mla
+    ks = jax.random.split(key, 7)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": _dense_init(ks[0], (cfg.d_model, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": _dense_init(ks[1], (m.q_lora_rank, cfg.num_heads * qk_head), dtype),
+        # joint KV down-projection + shared rope key
+        "w_dkv": _dense_init(ks[2], (cfg.d_model,
+                                     m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": _dense_init(ks[3], (m.kv_lora_rank,
+                                    cfg.num_heads * m.qk_nope_head_dim), dtype),
+        "w_uv": _dense_init(ks[4], (m.kv_lora_rank,
+                                    cfg.num_heads * m.v_head_dim), dtype),
+        "wo": _dense_init(ks[5], (cfg.num_heads * m.v_head_dim, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+def _band_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[int]) -> jnp.ndarray:
+    """(..., Sq, Sk) boolean allow-mask from position vectors."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    # sentinel (>= 2**29) marks padded KV slots — always excluded
+    ok = (k_pos < 2 ** 29)[..., None, :] & jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# core attention (jnp paths)
+# ---------------------------------------------------------------------------
+def naive_attention(q, k, v, mask, scale):
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D); mask (B,Sq,Sk) or (Sq,Sk) boolean."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale,
+                      block_kv: int = 1024, unroll: bool = False):
+    """Flash-style attention: scan over KV blocks with online softmax.
+
+    q (B,Sq,H,D); k,v (B,Sk,Hkv,D); q_pos (B,Sq); k_pos (B,Sk).
+    Memory: O(Sq * block_kv) logits at a time. ``unroll`` replaces the scan
+    with straight-line blocks (for cost-analysis-accurate dry-runs).
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    group = H // Hkv
+    nblk = -(-Sk // block_kv)
+    pad = nblk * block_kv - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, group, D)
+    kb = k.reshape(B, nblk, block_kv, Hkv, D)
+    vb = v.reshape(B, nblk, block_kv, Hkv, Dv)
+    pb = k_pos.reshape(B, nblk, block_kv)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk      # (B, block, Hkv, D), (B, block)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32))
+        ok = _band_mask(q_pos[:, None, None], pc[:, None, None], causal, window)
+        logits = jnp.where(ok, logits, NEG_INF)   # ok: (B,1,1,Sq,block)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, Dv), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for i in range(nblk):
+            carry, _ = step(carry, (kb[:, i], vb[:, i], pb[:, i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pb.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def chunked_attention_ha(q, k, v, q_pos, k_pos, causal, window, scale,
+                         block_kv: int = 1024, unroll: bool = False):
+    """Head-atomic variant of chunked_attention: K/V are repeated to the
+    full H query heads instead of reshaping H into (Hkv, group).
+
+    Why it exists: splitting H into (Hkv, group) makes the logits tensor
+    (B, Hkv, group, Sq, blk) unshardable when the mesh "model" axis divides
+    neither factor (e.g. 28 heads = 4 x 7 on a 16-way axis) — GSPMD then
+    replicates the biggest intermediate of the whole model and all-reduces
+    partial sums (measured: 27 TB/chip on qwen2-7b prefill_32k,
+    EXPERIMENTS.md §Perf-1). Keeping H atomic lets "model" shard it
+    (unevenly, padded) and kills both. The repeated K/V cost is
+    group x the (small) KV tensor, sharded like the logits.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // Hkv
+    from repro.sharding.constraints import data_axes_spec, maybe_constrain
+    from jax.sharding import PartitionSpec as P
+    dspec = data_axes_spec()
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = maybe_constrain(k, P(dspec, None, "model", None))
+    v = maybe_constrain(v, P(dspec, None, "model", None))
+    nblk = -(-Sk // block_kv)
+    pad = nblk * block_kv - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    qh = (q.astype(jnp.float32) * scale)
+    kb = k.reshape(B, nblk, block_kv, H, D)
+    vb = v.reshape(B, nblk, block_kv, H, Dv)
+    pb = k_pos.reshape(B, nblk, block_kv)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk                   # (B, blk, H, D), (B, blk)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qh, kc.astype(jnp.float32))
+        logits = maybe_constrain(logits, P(dspec, "model", None, None))
+        ok = _band_mask(q_pos, pc, causal, window)      # (B, Sq, blk)
+        logits = jnp.where(ok[:, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for i in range(nblk):
+            carry, _ = step(carry, (kb[:, i], vb[:, i], pb[:, i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pb.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, q_pos, window, scale):
+    """Single-step decode: q (B,1,H,D) against (B,Smax,Hkv,D) cache.
+
+    ``valid_len`` (B,) — number of filled cache slots; positions are
+    0..valid_len-1 (or a rolling window layout handled by the caller via
+    k_pos == slot positions).
+    """
+    B, _, H, D = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = H // Hkv
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, D)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(Smax)[None]
+    ok = kpos < valid_len[:, None]
+    if window is not None:
+        ok &= kpos > (q_pos[:, None] - window)
+    logits = jnp.where(ok[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, Smax, Hkv, D)
+    v: jnp.ndarray
+
+
+def init_kv_cache(batch, max_len, num_kv_heads, head_dim, dtype) -> KVCache:
+    shape = (batch, max_len, num_kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_forward(params, cfg, x, angles, *, head_mask=None, chunked=None):
+    """Full-sequence forward (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    use_chunked = chunked if chunked is not None else S > cfg.naive_attn_max
+    from repro.kernels import dispatch
+    if dispatch.enabled():
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=cfg.causal,
+                              window=cfg.sliding_window, scale=scale,
+                              interpret=dispatch.interpret())
+    elif use_chunked and cfg.attn_head_atomic:
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.constraints import (data_axes_spec,
+                                                maybe_constrain)
+        q = maybe_constrain(q, P(data_axes_spec(), None, "model", None))
+        out = chunked_attention_ha(q, k, v, pos, pos, cfg.causal,
+                                   cfg.sliding_window, scale,
+                                   unroll=cfg.attn_block_unroll)
+    elif use_chunked:
+        out = chunked_attention(q, k, v, pos, pos, cfg.causal,
+                                cfg.sliding_window, scale,
+                                unroll=cfg.attn_block_unroll)
+    else:
+        mask = _band_mask(jnp.arange(S), jnp.arange(S), cfg.causal,
+                          cfg.sliding_window)
+        out = naive_attention(q, k, v, mask, scale)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"], (k, v)
+
+
+def gqa_decode(params, cfg, x, angles, cache: KVCache, pos, *, head_mask=None):
+    """One-token decode. x (B,1,d_model); pos (B,) absolute position.
+
+    For sliding-window configs the cache is a rolling buffer of size
+    min(Smax, window): slot = pos % cache_len.
+    """
+    B = x.shape[0]
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    cache_len = cache.k.shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+    k_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0, 0)))(cache.k, k, slot)
+    v_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0, 0)))(cache.v, v, slot)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if cfg.sliding_window is not None and cache_len <= cfg.sliding_window:
+        # rolling buffer: every slot written within the window is valid
+        valid = jnp.minimum(pos + 1, cache_len)
+        window = None   # rolling buffer already enforces the window
+    else:
+        valid = pos + 1
+        window = cfg.sliding_window
+    out = decode_attention(q, k_cache, v_cache, valid, pos, window, scale)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, KVCache(k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3). Prefill materializes K/V; decode uses the
+# weight-absorbed latent form so the cache stays (kv_lora_rank + rope_dim)
+# floats per token regardless of head count.
+# ---------------------------------------------------------------------------
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray        # (B, Smax, kv_lora_rank)
+    krope: jnp.ndarray      # (B, Smax, qk_rope_head_dim)
+
+
+def init_mla_cache(batch, max_len, mla, dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, max_len, mla.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, mla.qk_rope_head_dim), dtype))
+
+
+def _mla_qkv(params, cfg, x, angles):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_lat = rmsnorm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = (q_lat @ params["w_uq"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, angles)
+    dkv = x @ params["w_dkv"]
+    ckv = rmsnorm(dkv[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], angles)[:, :, 0]  # shared
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(params, cfg, x, angles, *, head_mask=None):
+    """Prefill/train path: materialize per-head K/V from the latent."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, cfg, x, angles)
+    k_nope = (ckv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    vv = (ckv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None],
+                                          (B, S, H, m.qk_rope_head_dim))], -1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if S > cfg.naive_attn_max:
+        out = chunked_attention(q, k, vv, pos, pos, cfg.causal, None, scale,
+                                unroll=cfg.attn_block_unroll)
+    else:
+        mask = _band_mask(jnp.arange(S), jnp.arange(S), cfg.causal, None)
+        out = naive_attention(q, k, vv, mask, scale)
+    if head_mask is not None:
+        out = out * head_mask[None, None, :, None].astype(out.dtype)
+    out = out.reshape(B, S, H * m.v_head_dim) @ params["wo"]
+    return out, (ckv, k_rope)
+
+
+def mla_decode(params, cfg, x, angles, cache: MLACache, pos, *, head_mask=None):
+    """Absorbed decode: score/value computed in the latent space.
+
+    scores = (q_nope W_uk^T) . ckv + q_rope . k_rope     -- per head
+    out    = softmax(scores) @ ckv  then  W_uv, per head.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(params, cfg, x, angles)
+    # absorb W_uk: (B,1,H,nope) x (rank, H*nope) -> (B,H,rank)
+    wuk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    cache_len = cache.ckv.shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+    ckv_c = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0)))(cache.ckv, ckv_new, slot)
+    kr_c = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0)))(cache.krope, krope_new, slot)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat, ckv_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
+                        kr_c.astype(jnp.float32))
+    logits = (s_lat + s_rope) * scale
+    ok = jnp.arange(cache_len)[None] < (pos[:, None] + 1)
+    logits = jnp.where(ok[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", probs, ckv_c.astype(jnp.float32))
+    wuv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    if head_mask is not None:
+        out = out * head_mask[None, :, None]
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype) @ params["wo"]
+    return out, MLACache(ckv_c, kr_c)

@@ -1,0 +1,71 @@
+"""Feed-forward blocks: gated (SiLU-GLU / GeGLU) and non-gated (GELU /
+squared-ReLU, the Nemotron-4 variant).
+
+Pruning hook: ``ffn_mask`` (d_ff,) zeroes pruned inner channels — the
+structured axis the DDPG pruner controls for FFN layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(shape[0])).astype(dtype)
+
+
+GATED = {"silu_glu", "geglu"}
+
+
+def init_mlp_params(key, d_model, d_ff, activation, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _init(ks[0], (d_model, d_ff), dtype),
+         "w_down": _init(ks[1], (d_ff, d_model), dtype)}
+    if activation in GATED:
+        p["w_gate"] = _init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def _act(x, activation):
+    if activation == "silu_glu":
+        return jax.nn.silu(x)
+    if activation == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(activation)
+
+
+def mlp_forward(params, x, activation, *, ffn_mask=None):
+    from repro.kernels import dispatch
+    if dispatch.enabled() and ffn_mask is not None:
+        from repro.kernels.masked_matmul.ops import masked_matmul
+        h = _act(masked_matmul(x, params["w_up"], ffn_mask,
+                               interpret=dispatch.interpret()), activation)
+        if activation in GATED:
+            h = h * masked_matmul(x, params["w_gate"], ffn_mask,
+                                  interpret=dispatch.interpret())
+        return h @ params["w_down"]
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.constraints import data_axes_spec, maybe_constrain
+    dspec = data_axes_spec()
+    h = _act(x @ params["w_up"], activation)
+    if activation in GATED:
+        h = h * (x @ params["w_gate"])
+    # keep batch data-sharded / d_ff model-sharded through the FFN: without
+    # this GSPMD reshards the remat-saved hidden to batch-replicated fp32
+    # (EXPERIMENTS.md §Perf-2 it2: 3x ~278 GB/chip collective classes)
+    if h.ndim == 3:
+        h = maybe_constrain(h, P(dspec, None, "model"))
+    if ffn_mask is not None:
+        h = h * ffn_mask.astype(h.dtype)
+    out = h @ params["w_down"]
+    if out.ndim == 3:
+        out = maybe_constrain(out, P(dspec, None, None))
+    return out

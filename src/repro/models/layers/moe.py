@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer with sort-based (dropping) token dispatch.
+
+Dispatch strategy: flatten (token, k) assignments, sort by expert id, place
+each assignment at its position-within-expert in an (E, C, d) buffer
+(assignments beyond capacity C are dropped), run all experts as one batched
+einsum over stacked expert weights, then gather+combine weighted by router
+probabilities. This is the standard TPU-friendly formulation (cf. MaxText):
+no per-expert dynamic shapes, one big MXU-friendly GEMM.
+
+Expert weights are stacked (E, ...) so the "model" mesh axis shards the
+expert dimension (expert parallelism). The routing scatter/gather lowers to
+all-to-all-style collectives under SPMD — visible in the roofline's
+collective term and a target of the §Perf hillclimb.
+
+Pruning hook: ``expert_mask`` (E,) — pruned experts get -inf router logits
+(the DDPG pruner's structured axis for MoE layers). Router probabilities are
+re-normalized over surviving experts automatically by the softmax/top-k.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.mlp import GATED, _act
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray       # load-balance auxiliary loss (scalar)
+    z_loss: jnp.ndarray         # router z-loss (scalar)
+    drop_frac: jnp.ndarray      # fraction of assignments dropped
+
+
+def _init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(shape[-2])).astype(dtype)
+
+
+def init_moe_params(key, d_model, moe, activation, dtype):
+    E, de = moe.num_experts, moe.d_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d_model, E), jnp.float32)
+                     / math.sqrt(d_model)).astype(jnp.float32),
+        "w_up": _init(ks[1], (E, d_model, de), dtype),
+        "w_down": _init(ks[2], (E, de, d_model), dtype),
+    }
+    if activation in GATED:
+        p["w_gate"] = _init(ks[3], (E, d_model, de), dtype)
+    if moe.num_shared:
+        ds = de * moe.num_shared
+        p["w_up_sh"] = _init(ks[4], (d_model, ds), dtype)
+        p["w_down_sh"] = _init(ks[5], (ds, d_model), dtype)
+        if activation in GATED:
+            p["w_gate_sh"] = _init(ks[6], (d_model, ds), dtype)
+    return p
+
+
+def capacity(num_tokens: int, moe) -> int:
+    c = int(math.ceil(num_tokens * moe.top_k / moe.num_experts
+                      * moe.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def route(params, moe, x2d, expert_mask: Optional[jnp.ndarray]):
+    """x2d (T, d) -> (probs (T,k), idx (T,k), metrics pieces)."""
+    logits = (x2d.astype(jnp.float32) @ params["w_router"])
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None] > 0, logits, -1e30)
+    if moe.score_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(scores, moe.top_k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    E = moe.num_experts
+    dense_probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = E * jnp.sum(frac * dense_probs.mean(0)) * moe.router_aux_weight
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * moe.router_z_weight
+    return probs, idx, aux, z
+
+
+def moe_forward(params, moe, x, activation, *, expert_mask=None):
+    """x (B, S, d) -> (out (B, S, d), MoEMetrics)."""
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+    probs, idx, aux, z = route(params, moe, x2d, expert_mask)
+    E, k = moe.num_experts, moe.top_k
+    C = capacity(T, moe)
+
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)    # (T*k,)
+    flat_p = probs.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)               # E*C = drop bin
+
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.constraints import data_axes_spec, maybe_constrain
+    dspec = data_axes_spec()
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(
+        x2d[st] * keep[:, None].astype(x.dtype))
+    eb = buf[:-1].reshape(E, C, d)
+    # expert parallelism: the dispatch buffer lives expert-sharded on
+    # "model" so the scatter crossing (data-sharded tokens -> expert
+    # buffers) lowers to all-to-all instead of replicated-add all-reduce
+    # (EXPERIMENTS.md §Perf-4)
+    eb = maybe_constrain(eb, P("model", None, None))
+
+    h = _act(jnp.einsum("ecd,edf->ecf", eb, params["w_up"]), activation)
+    if activation in GATED:
+        h = h * jnp.einsum("ecd,edf->ecf", eb, params["w_gate"])
+    h = maybe_constrain(h, P("model", None, None))
+    ob = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    ob = maybe_constrain(ob, P("model", None, None)).reshape(E * C, d)
+
+    gathered = ob[jnp.minimum(slot, E * C - 1)] * keep[:, None].astype(x.dtype)
+    out2d = jnp.zeros((T, d), jnp.float32).at[st].add(
+        gathered.astype(jnp.float32) * sp[:, None])
+    out = maybe_constrain(out2d, P(dspec, None)).astype(x.dtype)
+
+    if moe.num_shared:
+        hs = _act(x2d @ params["w_up_sh"], activation)
+        if activation in GATED:
+            hs = hs * (x2d @ params["w_gate_sh"])
+        out = out + hs @ params["w_down_sh"]
+
+    drop = 1.0 - keep.sum().astype(jnp.float32) / (T * k)
+    return out.reshape(B, S, d), MoEMetrics(aux, z, drop)

@@ -1,0 +1,53 @@
+"""Normalization layers (pure-JAX reference path).
+
+The Pallas fused rmsnorm lives in ``repro.kernels.rmsnorm``; model code calls
+through :func:`rmsnorm` which dispatches on a module-level flag so the dry-run
+and smoke tests use the XLA path while kernel tests exercise Pallas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+                scale_offset: float = 0.0) -> jnp.ndarray:
+    """RMSNorm computed in fp32, cast back to input dtype.
+
+    ``scale_offset=1.0`` gives the gemma convention (weights stored as
+    ``scale - 1``).
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * (1.0 / jnp.sqrt(var + eps))
+    return (y * (scale.astype(jnp.float32) + scale_offset)).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, scale_offset: float = 0.0):
+    from repro.kernels import dispatch
+    if dispatch.enabled():
+        from repro.kernels.rmsnorm.ops import rmsnorm as rms_pallas
+        return rms_pallas(x, scale, eps=eps, scale_offset=scale_offset,
+                          interpret=dispatch.interpret())
+    return rmsnorm_ref(x, scale, eps, scale_offset)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba2's norm-then-gate: RMSNorm(x * silu(z))."""
+    x32 = x.astype(jnp.float32)
+    z32 = z.astype(jnp.float32)
+    g = x32 * (z32 * jnp.where(z32 >= 0, 1 / (1 + jnp.exp(-z32)),
+                               jnp.exp(z32) / (1 + jnp.exp(z32))))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return ((g / jnp.sqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim/2 frequency bands into
+(temporal, height, width) sections; text tokens use identical t/h/w position
+ids, vision tokens use their 3-D grid coordinates.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (..., S) -> angles (..., S, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, ...]) -> jnp.ndarray:
+    """positions (3, B, S) with (t, h, w) ids -> angles (B, S, head_dim//2).
+
+    ``sections`` gives how many frequency bands each of t/h/w owns;
+    sum(sections) == head_dim // 2.
+    """
+    assert positions.shape[0] == 3
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)                     # (half,)
+    # angle per axis then select by band-section
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (3, B, S, half)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=head_dim // 2)
+    return _select_sections(ang, sec_id)
+
+
+def _select_sections(ang: jnp.ndarray, sec_id: jnp.ndarray) -> jnp.ndarray:
+    """ang (3, B, S, half), sec_id (half,) in {0,1,2} -> (B, S, half)."""
+    onehot = (sec_id[None, :] == jnp.arange(3)[:, None]).astype(ang.dtype)  # (3, half)
+    return jnp.einsum("absh,ah->bsh", ang, onehot)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, D), angles (B, S, D//2) -> rotated x (same dtype)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    cos = jnp.cos(angles)[..., None, :]   # (B, S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def positions_for(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.asarray(offset).reshape(-1, 1)
+
+
+def text_mrope_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    """Text-only M-RoPE ids: t == h == w == position. (3, B, S)."""
+    p = positions_for(batch, seq, offset)
+    p = jnp.broadcast_to(p, (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,233 @@
+"""Mamba2 block (state-space duality / SSD, arXiv:2405.21060).
+
+Forward path uses the chunked SSD algorithm: intra-chunk attention-like
+dot-products + an inter-chunk linear state recurrence (``lax.scan`` over
+chunks). This is the TPU-native formulation — chunk matmuls hit the MXU and
+the sequential part is O(S / chunk). The Pallas kernel in
+``repro.kernels.ssd_scan`` implements the same math with explicit VMEM
+tiling; this file is the pure-jnp reference the kernel is validated against.
+
+Decode: O(1) per token — conv rolling state (d_conv-1 taps) + SSM state
+(H, P, N) per layer.
+
+Pruning hook: ``head_mask`` (ssm_heads,) zeroes pruned SSD heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import gated_rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray     # (B, d_conv-1, conv_dim)
+    state: jnp.ndarray    # (B, H, P, N) fp32
+
+
+def _init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(shape[0])).astype(dtype)
+
+
+def conv_dim(cfg) -> int:
+    s = cfg.ssm
+    return cfg.d_inner + 2 * s.n_groups * s.d_state
+
+
+def init_ssm_params(key, cfg, dtype):
+    s = cfg.ssm
+    H = cfg.ssm_heads
+    d_in = cfg.d_inner
+    cdim = conv_dim(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "w_in": _init(ks[0], (cfg.d_model, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, cdim), jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": _init(ks[3], (d_in, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, d_conv):
+    """Depthwise causal conv1d. xBC (B,S,Cd), conv_w (K,Cd)."""
+    pad = jnp.pad(xBC, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(d_conv))
+    return jax.nn.silu((out + conv_b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x):
+    """x (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum_{j < m <= i} x[m]; -inf above the diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk):
+    """Chunked SSD scan (fp32 math).
+
+    xh (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative;
+    Bm/Cm (B,S,G,N) broadcastable to heads (G divides H).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rep = H // G
+    f32 = jnp.float32
+    xc = xh.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, 3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, 3).astype(f32)
+
+    dA = dtc * A.astype(f32)                       # (B,nc,Q,H)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp",
+                        CB * L, dtc, xc)
+    # chunk-final states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Bc, dtc, decay_to_end, xc)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((Bsz, H, P, N), f32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # (B,nc,H,P,N)
+    # off-diagonal contribution: carry-in state seen through per-step decay
+    state_decay = jnp.exp(dA_cs)                            # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(Bsz, nc * chunk, H, P)
+    return y[:, :S], final
+
+
+def ssm_forward(params, cfg, x, *, head_mask=None, return_state=False):
+    """Full-sequence Mamba2 block. x (B,S,d_model).
+
+    With ``return_state``, also returns an SSMCache holding the rolling conv
+    tail (raw pre-conv inputs) and the final SSD state — exactly what
+    ``ssm_decode`` consumes to continue the sequence.
+    """
+    s = cfg.ssm
+    H, P = cfg.ssm_heads, s.head_dim
+    proj = x @ params["w_in"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC_raw = xBC
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"], s.d_conv)
+    d_in = cfg.d_inner
+    gn = s.n_groups * s.d_state
+    xs = xBC[..., :d_in].reshape(*x.shape[:2], H, P)
+    Bm = xBC[..., d_in:d_in + gn].reshape(*x.shape[:2], s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gn:].reshape(*x.shape[:2], s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    from repro.kernels import dispatch
+    if dispatch.enabled():
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y, state = ssd_scan(xs, dt, A, Bm, Cm, head_mask=head_mask,
+                            chunk=s.chunk_size,
+                            interpret=dispatch.interpret())
+    else:
+        y, state = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size)
+        if head_mask is not None:
+            y = y * head_mask[None, None, :, None]
+    skip = params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    if head_mask is not None:
+        skip = skip * head_mask[None, None, :, None]
+    y = y + skip
+    y = y.reshape(*x.shape[:2], d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    if return_state:
+        K = s.d_conv
+        S_len = x.shape[1]
+        if S_len >= K - 1:
+            tail = xBC_raw[:, S_len - (K - 1):]
+        else:
+            tail = jnp.pad(xBC_raw, ((0, 0), (K - 1 - S_len, 0), (0, 0)))
+        return out, SSMCache(tail.astype(x.dtype), state)
+    return out
+
+
+def init_ssm_cache(cfg, batch, dtype) -> SSMCache:
+    s = cfg.ssm
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim(cfg)), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, s.head_dim, s.d_state),
+                        jnp.float32))
+
+
+def ssm_decode(params, cfg, x, cache: SSMCache, *, head_mask=None):
+    """One-token decode. x (B,1,d_model) -> (out (B,1,d), new cache)."""
+    s = cfg.ssm
+    H, P = cfg.ssm_heads, s.head_dim
+    B = x.shape[0]
+    proj = x[:, 0] @ params["w_in"]                  # (B, proj_out)
+    z, xBC, dt = _split_proj(cfg, proj)
+    # rolling conv state
+    hist = jnp.concatenate([cache.conv, xBC[:, None]], axis=1)  # (B,K,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = hist[:, 1:].astype(cache.conv.dtype)
+
+    d_in = cfg.d_inner
+    gn = s.n_groups * s.d_state
+    xs = xBC[..., :d_in].reshape(B, H, P)
+    Bm = xBC[..., d_in:d_in + gn].reshape(B, s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gn:].reshape(B, s.n_groups, s.d_state)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1)                 # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                          # (B,H)
+    state = (cache.state * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt, xs, Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + params["D"][None, :, None] * xs
+    if head_mask is not None:
+        y = y * head_mask[None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z[:, None], params["norm_scale"], cfg.norm_eps)
+    return y @ params["w_out"], SSMCache(new_conv, state)

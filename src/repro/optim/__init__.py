@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd_momentum,
+                                    make_optimizer)
+from repro.optim.schedules import step_lr, cosine_warmup, constant

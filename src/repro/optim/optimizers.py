@@ -1,0 +1,93 @@
+"""Optimizers as pure-pytree transforms (no external deps).
+
+``sgd_momentum`` is the paper's fine-tuning optimizer (§4.1: momentum 0.9).
+``adamw`` drives transformer training. Moment dtype is configurable so the
+giant-config dry-runs can hold optimizer state in bf16 (see DESIGN.md §5 and
+the memory roofline discussion in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]   # (grads, state, params) -> (params, state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def sgd_momentum(schedule, momentum: float = 0.9,
+                 weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mom": _tree_zeros_like(params, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr = schedule(state["step"])
+        mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mom"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * (m + weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, mom)
+        return new_params, {"mom": mom, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, moment_dtype),
+                "v": _tree_zeros_like(params, moment_dtype),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        if grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g * scale.astype(g.dtype), grads)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: (b1 * mm.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(moment_dtype), state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: (b2 * vv.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(moment_dtype), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm.astype(jnp.float32) / bc1
+            vhat = vv.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, schedule, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd_momentum(schedule, **kw)
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    raise ValueError(name)

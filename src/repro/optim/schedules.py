@@ -1,0 +1,30 @@
+"""Learning-rate schedules. ``step_lr`` is the paper's setup (§4.1):
+lr0=0.01, gamma=0.1 every 20 epochs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+    return sched
+
+
+def step_lr(lr0: float = 0.01, gamma: float = 0.1, step_size: int = 20,
+            steps_per_epoch: int = 1):
+    """StepLR in epochs, evaluated per optimizer step (paper §4.1)."""
+    def sched(step):
+        epoch = step // steps_per_epoch
+        return jnp.asarray(lr0, jnp.float32) * gamma ** (epoch // step_size)
+    return sched
+
+
+def cosine_warmup(lr0: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr0 * warm * cos
+    return sched

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (assignment-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~per-chip collective bw)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB per chip
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,67 @@
+"""Assigned-architecture configs: exact published shapes + smoke reductions."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment table
+EXPECTED = {
+    "mamba2-2.7b": (64, 2560, None, None, 0, 50280),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    # assignment's "d_ff=2048" is the per-expert dim (checked separately)
+    "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_published_shape(arch):
+    cfg = get_config(arch)
+    L, d, H, Hkv, dff, V = EXPECTED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if H is not None:
+        assert cfg.num_heads == H
+        assert cfg.num_kv_heads == Hkv
+    if dff is not None:
+        assert cfg.d_ff == dff
+    assert cfg.vocab_size == V
+    assert cfg.citation, f"{arch} must cite its source"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduction_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+def test_arch_specifics():
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("mamba2-2.7b").attention == "none"
+    assert get_config("gemma-7b").head_dim == 256
+    assert get_config("gemma-7b").activation == "geglu"
+    assert get_config("qwen1.5-4b").qkv_bias
+    assert get_config("qwen2-7b").qkv_bias
+    assert get_config("hubert-xlarge").causal is False
+    assert get_config("nemotron-4-340b").activation == "sq_relu"
+    assert get_config("qwen2-vl-7b").rope_mode == "mrope"
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+    assert get_config("zamba2-1.2b").shared_attn_period > 0
+    ds = get_config("deepseek-v3-671b")
+    assert ds.moe.d_expert == 2048               # assignment's "d_ff=2048"
+    assert ds.moe.num_experts == 256 and ds.moe.top_k == 8
+    assert ds.moe.num_shared == 1 and ds.attention == "mla"
+    assert ds.mtp_depth == 1
+    mx = get_config("mixtral-8x7b")
+    assert mx.moe.num_experts == 8 and mx.moe.top_k == 2
+    assert mx.sliding_window is not None

@@ -1,0 +1,79 @@
+"""Cache-path consistency: forward (full sequence) == prefill + decode_step,
+for every causal architecture family. This is the invariant split serving
+relies on."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import moe_no_drop, smoke_batch
+from repro.models import transformer as tr
+
+TOL = 2e-3
+
+
+def _full_and_decoded(cfg, B=2, S=16, n_decode=3, seed=0):
+    params = tr.init_params(cfg, jax.random.PRNGKey(seed))
+    batch = smoke_batch(cfg, B, S, seed=seed, with_labels=False)
+    logits_full, _ = tr.forward(params, cfg, batch)
+    max_len = S + cfg.vision_tokens + 4
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :S - n_decode]
+    lg, cache = tr.prefill(params, cfg, pre, max_len=max_len)
+    outs = []
+    for t in range(S - n_decode, S):
+        lg, cache = tr.decode_step(params, cfg, cache,
+                                   batch["tokens"][:, t:t + 1])
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)
+    want = logits_full[:, cfg.vision_tokens:][:, -n_decode:]
+    return got, want
+
+
+def test_decode_matches_forward(smoke_cfg):
+    cfg = moe_no_drop(smoke_cfg)
+    if not cfg.causal:
+        pytest.skip("encoder-only: no decode")
+    got, want = _full_and_decoded(cfg)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < TOL, f"{cfg.name}: {err}"
+
+
+def test_prefill_rejects_short_max_len(smoke_cfg):
+    cfg = smoke_cfg
+    if (not cfg.causal or cfg.sliding_window is not None
+            or cfg.attention != "gqa" or cfg.arch_type in ("ssm", "hybrid")):
+        pytest.skip("guard applies to causal GQA KV caches only "
+                    "(SSM state is O(1); MLA keeps the full latent)")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, 2, 16, with_labels=False)
+    with pytest.raises(ValueError):
+        tr.prefill(params, cfg, batch, max_len=4)
+
+
+def test_sliding_window_rolling_cache():
+    """Decode far past the window: rolling buffer must equal full forward."""
+    from repro.configs.registry import get_smoke_config
+    cfg = get_smoke_config("mixtral-8x7b").replace(dtype="float32")
+    cfg = moe_no_drop(cfg).replace(sliding_window=8)
+    S = 24                                     # 3x the window
+    params = tr.init_params(cfg, jax.random.PRNGKey(1))
+    tok = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0,
+                             cfg.vocab_size)
+    logits_full, _ = tr.forward(params, cfg, {"tokens": tok})
+    lg, cache = tr.prefill(params, cfg, {"tokens": tok[:, :4]}, max_len=S)
+    for t in range(4, S):
+        lg, cache = tr.decode_step(params, cfg, cache, tok[:, t:t + 1])
+    err = float(jnp.max(jnp.abs(lg - logits_full[:, -1])))
+    assert err < TOL, err
+
+
+def test_scan_vs_unrolled_stack(smoke_cfg):
+    """scan_layers=False (dry-run mode) produces identical logits."""
+    cfg = smoke_cfg
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, 2, 8, with_labels=False)
+    a, _ = tr.forward(params, cfg, batch)
+    b, _ = tr.forward(params, cfg.replace(scan_layers=False), batch)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-5

@@ -1,0 +1,155 @@
+"""Coverage for the §Perf machinery: gradient accumulation, head-atomic
+chunked attention, activation-constraint helper, MoE dispatch pins."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import moe_no_drop, smoke_batch
+from repro.configs.registry import get_smoke_config
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tr
+from repro.models.layers.attention import (chunked_attention,
+                                           chunked_attention_ha)
+from repro.optim import constant, sgd_momentum
+from repro.sharding.constraints import data_axes_spec, maybe_constrain
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen2-7b", "mamba2-2.7b",
+                                  "mixtral-8x7b"])
+def test_grad_accum_matches_monolithic(arch):
+    cfg = moe_no_drop(get_smoke_config(arch).replace(dtype="float32"))
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    opt = sgd_momentum(constant(0.1))
+    batch = smoke_batch(cfg, 4, 8)
+    p1, _, _ = jax.jit(make_train_step(cfg, opt))(
+        params, opt.init(params), batch)
+    p2, _, _ = jax.jit(make_train_step(cfg, opt, grad_accum=2))(
+        params, opt.init(params), batch)
+    # MoE: the Switch aux loss is nonlinear in batch size, so
+    # mean-of-microbatch-aux legitimately differs from full-batch aux by
+    # O(1e-4) in the grads — wider tolerance there.
+    tol = 2e-3 if cfg.moe is not None else 2e-4
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol, atol=tol)
+
+
+def test_grad_accum_metrics_averaged():
+    cfg = get_smoke_config("qwen2-7b").replace(dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    opt = sgd_momentum(constant(0.0))        # lr 0: params fixed
+    batch = smoke_batch(cfg, 4, 8)
+    _, _, m1 = jax.jit(make_train_step(cfg, opt))(
+        params, opt.init(params), batch)
+    _, _, m4 = jax.jit(make_train_step(cfg, opt, grad_accum=4))(
+        params, opt.init(params), batch)
+    np.testing.assert_allclose(float(m1["xent"]), float(m4["xent"]),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# head-atomic attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 9),
+                                           (False, None)])
+def test_head_atomic_equals_grouped(causal, window):
+    B, S, H, Hkv, D = 2, 50, 6, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = chunked_attention(q, k, v, pos, pos, causal, window, 0.25,
+                          block_kv=16)
+    b = chunked_attention_ha(q, k, v, pos, pos, causal, window, 0.25,
+                             block_kv=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_attn_head_atomic_config_end_to_end():
+    """forward logits identical with the flag on (CPU: constraints no-op)."""
+    cfg = get_smoke_config("qwen2-7b").replace(dtype="float32",
+                                               naive_attn_max=0)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    batch = smoke_batch(cfg, 2, 24, with_labels=False)
+    a, _ = tr.forward(params, cfg, batch)
+    b, _ = tr.forward(params, cfg.replace(attn_head_atomic=True), batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# constraints helper
+# ---------------------------------------------------------------------------
+def test_maybe_constrain_noop_off_mesh():
+    x = jnp.ones((4, 8))
+    y = maybe_constrain(x, P("data", "model"))
+    assert y is x                       # literally untouched
+    assert data_axes_spec() is None
+
+
+def test_maybe_constrain_applies_on_mesh():
+    n = len(jax.devices())
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, n), ("data", "model"))
+    seen = {}
+
+    def f(x):
+        seen["dspec"] = data_axes_spec()     # captured at trace time
+        return maybe_constrain(x, P("data", ("bogus",), "model"))
+
+    with mesh:
+        lowered = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((2, 3, 4), jnp.float32))
+        lowered.compile()
+        text = lowered.as_text()
+        # constraint present; bogus axis dropped (dim 1 empty), rest kept
+        assert "sharding_constraint" in text
+        assert '[{"data"}, {}, {"model"}]' in text
+    assert seen["dspec"] == "data"
+
+
+def test_constraints_inside_shard_map_ignore_manual_axes():
+    """Inside a pod-manual shard_map, constraints must drop 'pod'."""
+    from repro.core.partition import pod_pipeline as pp
+    cfg = get_smoke_config("qwen2-7b").replace(dtype="float32",
+                                               remat=False)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    sp = dict(params)
+    sp["runs"] = [pp.stack_stage_params(params, cfg, 1)]
+    n = len(jax.devices())
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, 1, n),
+        ("pod", "data", "model"))
+    tok = jnp.zeros((2, 8), jnp.int32)
+    with mesh:
+        # mlp_forward inside the stage calls maybe_constrain; 'pod' must
+        # be filtered (Manual) or this raises
+        logits = jax.jit(pp.make_split_serve_step(cfg, 1, 2, mesh))(
+            sp, {"tokens": tok})
+    assert bool(jnp.isfinite(logits).all())
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch pins keep semantics
+# ---------------------------------------------------------------------------
+def test_moe_pins_preserve_decode_consistency():
+    cfg = moe_no_drop(get_smoke_config("mixtral-8x7b").replace(
+        dtype="float32"))
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                             cfg.vocab_size)
+    full, _ = tr.forward(params, cfg, {"tokens": tok})
+    lg, cache = tr.prefill(params, cfg, {"tokens": tok[:, :11]},
+                           max_len=16)
+    lg, _ = tr.decode_step(params, cfg, cache, tok[:, 11:12])
+    assert float(jnp.max(jnp.abs(lg - full[:, -1]))) < 2e-3

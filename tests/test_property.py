@@ -1,0 +1,164 @@
+"""Hypothesis property tests on the system's invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition.latency_model import LayerCost, split_latency
+from repro.core.partition.profiles import PAPER_PROFILE
+from repro.core.partition.splitter import balanced_split, greedy_split
+from repro.core.pruning.amc_env import LayerDesc, PruningEnv
+from repro.core.pruning.masks import _topk_mask
+from repro.kernels.masked_matmul.ops import masked_matmul
+from repro.kernels.masked_matmul.ref import masked_matmul_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+@SET
+@given(rows=st.integers(1, 40), d=st.sampled_from([8, 32, 96]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref_any_shape(rows, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d))
+    s = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, s, interpret=True)),
+        np.asarray(rmsnorm_ref(x, s)), rtol=3e-5, atol=3e-5)
+
+
+@SET
+@given(m=st.integers(1, 50), k=st.integers(1, 60), n=st.integers(1, 50),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_matmul_matches_ref_any_shape(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.normal(ks[0], (m, k))
+    b = jax.random.normal(ks[1], (k, n))
+    mask = (jax.random.uniform(ks[2], (n,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(masked_matmul(a, b, mask, block_m=16, block_n=16,
+                                 block_k=16, interpret=True)),
+        np.asarray(masked_matmul_ref(a, b, mask)), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# latency model / splitter
+# ---------------------------------------------------------------------------
+def _rand_costs(rng, n):
+    return [LayerCost(i, f"l{i}", float(rng.uniform(1e6, 1e9)),
+                      float(rng.uniform(1e3, 1e6))) for i in range(n)]
+
+
+@SET
+@given(n=st.integers(1, 20), seed=st.integers(0, 10_000))
+def test_greedy_split_is_global_argmin(n, seed):
+    rng = np.random.RandomState(seed)
+    costs = _rand_costs(rng, n)
+    dec = greedy_split(costs, PAPER_PROFILE, input_bytes=73_500.0)
+    brute = min((split_latency(costs, c, PAPER_PROFILE, 73_500.0)["T"], c)
+                for c in range(n + 1))
+    assert abs(dec.latency["T"] - brute[0]) < 1e-12
+
+
+@SET
+@given(n=st.integers(1, 15), seed=st.integers(0, 10_000))
+def test_split_latency_terms_consistent(n, seed):
+    rng = np.random.RandomState(seed)
+    costs = _rand_costs(rng, n)
+    for c in range(n + 1):
+        row = split_latency(costs, c, PAPER_PROFILE, 73_500.0)
+        assert row["T"] == row["T_D"] + row["T_TX"] + row["T_S"]
+        assert row["T_D"] >= 0 and row["T_TX"] >= 0 and row["T_S"] >= 0
+    # edge cases: c=0 transmits the raw input; c=n transmits nothing
+    assert split_latency(costs, 0, PAPER_PROFILE, 73_500.0)["tx_bytes"] == 73_500.0
+    assert split_latency(costs, n, PAPER_PROFILE, 73_500.0)["T_TX"] == 0.0
+
+
+@SET
+@given(n=st.integers(1, 15), seed=st.integers(0, 10_000))
+def test_balanced_split_minimizes_bottleneck(n, seed):
+    rng = np.random.RandomState(seed)
+    costs = _rand_costs(rng, n)
+    dec = balanced_split(costs, PAPER_PROFILE, 73_500.0)
+    bn = max(dec.latency["T_D"], dec.latency["T_TX"], dec.latency["T_S"])
+    for c in range(n + 1):
+        row = split_latency(costs, c, PAPER_PROFILE, 73_500.0)
+        assert bn <= max(row["T_D"], row["T_TX"], row["T_S"]) + 1e-12
+
+
+@SET
+@given(seed=st.integers(0, 10_000))
+def test_pruning_shrinks_latency_model(seed):
+    """More aggressive pruning never increases any latency term (CNN model)."""
+    from repro.core.partition.latency_model import cnn_layer_costs
+    from repro.models.cnn import tiny_cnn_config
+    cfg = tiny_cnn_config()
+    rng = np.random.RandomState(seed)
+    li = [i for i, s in enumerate(cfg.layers) if s.kind == "conv"]
+    keep_hi, keep_lo = {}, {}
+    for i in li:
+        n = cfg.layers[i].out_channels
+        khi = rng.randint(n // 2, n + 1)
+        klo = rng.randint(1, khi + 1)
+        m = np.zeros(n, np.float32)
+        m[:khi] = 1
+        keep_hi[i] = jnp.asarray(m)
+        m2 = np.zeros(n, np.float32)
+        m2[:klo] = 1
+        keep_lo[i] = jnp.asarray(m2)
+    hi = cnn_layer_costs(cfg, keep_hi)
+    lo = cnn_layer_costs(cfg, keep_lo)
+    assert sum(c.flops for c in lo) <= sum(c.flops for c in hi) + 1e-9
+    assert all(a.out_bytes <= b.out_bytes + 1e-9 for a, b in zip(lo, hi))
+
+
+# ---------------------------------------------------------------------------
+# pruning env / masks
+# ---------------------------------------------------------------------------
+@SET
+@given(n=st.integers(2, 30), ratio=st.floats(0.01, 1.0),
+       seed=st.integers(0, 10_000))
+def test_topk_mask_keep_count(n, ratio, seed):
+    imp = np.random.RandomState(seed).rand(n).astype(np.float32)
+    m = _topk_mask(imp, ratio)
+    k = int(m.sum())
+    assert k == max(1, min(n, int(round(ratio * n))))
+    # kept units are the top-k by importance
+    kept = np.sort(imp[m > 0])
+    dropped = imp[m == 0]
+    if dropped.size:
+        assert kept.min() >= dropped.max() - 1e-9
+
+
+@SET
+@given(budget=st.floats(0.2, 0.9), seed=st.integers(0, 10_000))
+def test_amc_clipping_keeps_budget_reachable(budget, seed):
+    rng = np.random.RandomState(seed)
+    descs = [LayerDesc(i, 64, 64, 8, 8, 1, 3, float(rng.uniform(1e6, 1e9)),
+                       in_coupled=False)
+             for i in range(6)]
+    env = PruningEnv(descs, evaluate=lambda r: 0.5, flops_budget=budget,
+                     action_floor=0.1)
+    rec = env.run_episode(lambda s, i: 1.0)     # agent always asks "keep all"
+    assert rec["flops_kept"] <= budget + 0.15   # floor granularity slack
+    # every action respects the floor and ceiling
+    assert all(env.floor <= a <= 1.0 for a in rec["actions"])
+
+
+@SET
+@given(seed=st.integers(0, 10_000))
+def test_env_state_normalized(seed):
+    rng = np.random.RandomState(seed)
+    descs = [LayerDesc(i, 64, 64, 8, 8, 1, 3, float(rng.uniform(1e6, 1e9)))
+             for i in range(5)]
+    env = PruningEnv(descs, evaluate=lambda r: 0.5)
+    for i in range(len(descs)):
+        s = env.state(i, 0.0, env.total_flops, 1.0)
+        assert s.shape == (11,)
+        assert np.all(s <= 1.0 + 1e-6) and np.all(s >= -1e-6)

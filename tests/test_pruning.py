@@ -1,0 +1,172 @@
+"""DRL pruning stack: masks, environment, DDPG agent, policy search."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core.pruning.amc_env import (LayerDesc, PruningEnv,
+                                        cnn_layer_descs,
+                                        transformer_layer_descs)
+from repro.core.pruning.ddpg import (ReplayBuffer, actor_apply, agent_update,
+                                     critic_apply, init_agent,
+                                     truncated_normal_action)
+from repro.core.pruning.masks import (cnn_masks_from_ratios, mask_sparsity,
+                                      transformer_masks_from_ratios,
+                                      transformer_prunable_units)
+from repro.core.pruning.policy import search_pruning_policy
+from repro.models import transformer as tr
+from repro.models.cnn import (cnn_apply, compact_params, init_cnn_params,
+                              prunable_layers, tiny_cnn_config)
+
+
+# ---------------------------------------------------------------------------
+# CNN masks + compaction
+# ---------------------------------------------------------------------------
+def test_masked_equals_compacted():
+    """Mask-based execution == physically compacted network (same logits)."""
+    cfg = tiny_cnn_config(num_classes=7, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    ratios = {i: 0.5 for i in prunable_layers(cfg)}
+    masks = cnn_masks_from_ratios(params, cfg, ratios)
+    # classifier head stays dense in ratios? prunable_layers excludes head
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    masked = cnn_apply(params, cfg, x, masks=masks)
+    cparams, ccfg = compact_params(params, cfg, masks)
+    compact = cnn_apply(cparams, ccfg, x)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(compact),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cnn_masks_keep_ratio():
+    cfg = tiny_cnn_config()
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(params, cfg, {0: 0.25})
+    m = np.asarray(masks[0])
+    n = cfg.layers[0].out_channels
+    assert int(m.sum()) == max(1, round(0.25 * n))
+
+
+def test_transformer_masks_structure():
+    cfg = get_smoke_config("qwen2-7b").replace(dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    units = transformer_prunable_units(cfg)
+    ratios = [0.5] * len(units)
+    masks = transformer_masks_from_ratios(params, cfg, ratios)
+    assert len(masks) == len(tr.layer_runs(cfg))
+    # GQA group preservation: head mask constant within each kv group
+    hm = np.asarray(masks[0]["head_mask"])         # (count, H)
+    g = cfg.num_heads // cfg.num_kv_heads
+    per_group = hm.reshape(hm.shape[0], cfg.num_kv_heads, g)
+    assert (per_group == per_group[..., :1]).all()
+    assert 0.0 < mask_sparsity(masks) < 1.0
+
+
+def test_transformer_masked_forward_runs():
+    cfg = get_smoke_config("mixtral-8x7b").replace(dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    units = transformer_prunable_units(cfg)
+    masks = transformer_masks_from_ratios(params, cfg,
+                                          [0.6] * len(units))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                             cfg.vocab_size)
+    logits, _ = tr.forward(params, cfg, {"tokens": tok}, masks=masks)
+    assert bool(jnp.isfinite(logits).all())
+    # masked decode path too
+    lg, cache = tr.prefill(params, cfg, {"tokens": tok}, max_len=12,
+                           masks=masks)
+    lg2, _ = tr.decode_step(params, cfg, cache, tok[:, :1], masks=masks)
+    assert bool(jnp.isfinite(lg2).all())
+
+
+def test_ssm_mask_forward():
+    cfg = get_smoke_config("mamba2-2.7b").replace(dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    units = transformer_prunable_units(cfg)
+    assert all(u["axis"] == "ssm_head_mask" for u in units)
+    masks = transformer_masks_from_ratios(params, cfg, [0.5] * len(units))
+    tok = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = tr.forward(params, cfg, {"tokens": tok}, masks=masks)
+    assert bool(jnp.isfinite(logits).all())
+
+
+# ---------------------------------------------------------------------------
+# layer descriptors
+# ---------------------------------------------------------------------------
+def test_cnn_layer_descs_match_prunable():
+    cfg = tiny_cnn_config()
+    descs = cnn_layer_descs(cfg)
+    assert [d.index for d in descs] == prunable_layers(cfg)
+    assert all(d.flops > 0 for d in descs)
+
+
+def test_transformer_layer_descs_align_with_units():
+    cfg = get_smoke_config("deepseek-v3-671b").replace(dtype="float32")
+    units = transformer_prunable_units(cfg)
+    descs = transformer_layer_descs(cfg)
+    assert len(descs) == len(units)
+    assert all(d.flops > 0 for d in descs)
+
+
+# ---------------------------------------------------------------------------
+# DDPG
+# ---------------------------------------------------------------------------
+def test_ddpg_actor_range():
+    agent = init_agent(jax.random.PRNGKey(0), 11)
+    s = jax.random.normal(jax.random.PRNGKey(1), (32, 11))
+    a = actor_apply(agent.actor, s)
+    assert float(a.min()) >= 0.05 and float(a.max()) <= 1.0
+
+
+def test_truncated_noise_in_bounds():
+    key = jax.random.PRNGKey(0)
+    a = truncated_normal_action(key, jnp.full((256,), 0.5), 0.5)
+    assert float(a.min()) >= 0.05 and float(a.max()) <= 1.0
+
+
+def test_ddpg_update_learns_reward_signal():
+    """Critic learns to predict a reward that prefers high actions; the
+    actor follows (mean action increases)."""
+    key = jax.random.PRNGKey(0)
+    agent = init_agent(key, 11)
+    rng = np.random.RandomState(0)
+    buf = ReplayBuffer(11, capacity=500)
+    for _ in range(300):
+        s = rng.rand(11).astype(np.float32)
+        a = rng.uniform(0.05, 1.0)
+        r = a                                    # reward = action
+        buf.add(s, a, r, np.zeros(11, np.float32), 1.0)
+    s_test = jnp.asarray(rng.rand(64, 11).astype(np.float32))
+    a0 = float(actor_apply(agent.actor, s_test).mean())
+    for _ in range(200):
+        agent, metrics = agent_update(agent, buf.sample(rng, 64),
+                                      baseline=0.5)
+    a1 = float(actor_apply(agent.actor, s_test).mean())
+    assert a1 > a0 + 0.1, (a0, a1)
+    assert np.isfinite(float(metrics["critic_loss"]))
+
+
+def test_policy_search_finds_flops_heavy_layer():
+    """Toy env: accuracy only depends on keeping layer 0 (others free).
+    The search should learn to keep layer 0 and prune the rest."""
+    descs = [LayerDesc(i, 32, 32, 4, 4, 1, 3, 1e8, in_coupled=False)
+             for i in range(4)]
+
+    def evaluate(ratios):
+        return float(ratios[0]) - 0.1 * float(np.mean(ratios[1:]))
+
+    env = PruningEnv(descs, evaluate, flops_budget=0.5)
+    res = search_pruning_policy(env, episodes=60, warmup=10, seed=0)
+    assert res.best_reward > 0.55
+    assert res.best_ratios[0] > np.mean(res.best_ratios[1:])
+    assert res.best_flops_kept <= 0.75
+
+
+def test_replay_buffer_ring():
+    buf = ReplayBuffer(4, capacity=8)
+    for i in range(20):
+        buf.add(np.full(4, i, np.float32), i, i, np.zeros(4), 0.0)
+    assert buf.n == 8
+    sample = buf.sample(np.random.RandomState(0), 16)
+    assert float(sample["action"].min()) >= 12      # oldest overwritten

@@ -1,0 +1,70 @@
+"""End-to-end behaviour of the paper's system at reduced scale: the full
+two-stage pipeline (train -> DDPG prune -> fine-tune -> greedy split) and
+the joint claims the paper makes about it."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (evaluate_topk, run_paper_pipeline,
+                                 train_cnn)
+from repro.data.synthetic import PlantVillageSynthetic
+from repro.models.cnn import init_cnn_params, tiny_cnn_config
+
+
+@pytest.fixture(scope="module")
+def pipeline_result():
+    cfg = tiny_cnn_config(num_classes=38, width=0.2, hw=32)
+    data = PlantVillageSynthetic(n_per_class=12, hw=32)
+    # adamw at reduced scale (paper's SGD recipe needs many more epochs
+    # at tiny width — DESIGN.md §7; the SGD/StepLR recipe itself is
+    # validated in test_substrate.py)
+    return run_paper_pipeline(cfg, data, train_epochs=6, finetune_epochs=2,
+                              episodes=8, warmup=3, flops_budget=0.6,
+                              seed=0, optimizer_name="adamw", lr=3e-3)
+
+
+def test_training_learns(pipeline_result):
+    """The original model beats the 1/38 random baseline by a wide margin."""
+    assert pipeline_result.acc_original["top1"] > 0.30
+    assert pipeline_result.acc_original["top5"] > 0.55
+
+
+def test_paper_table1_ordering(pipeline_result):
+    """Table 1 qualitative claims: pruning costs some accuracy; top-k
+    accuracies are monotone in k."""
+    r = pipeline_result
+    for acc in (r.acc_original, r.acc_pruned, r.acc_finetuned):
+        assert acc["top1"] <= acc["top3"] <= acc["top5"]
+    # fine-tuning recovers (or beats) the pruned accuracy
+    assert r.acc_finetuned["top1"] >= r.acc_pruned["top1"] - 0.02
+
+
+def test_pruning_reduces_flops(pipeline_result):
+    assert pipeline_result.search.best_flops_kept < 0.95
+    assert 0 < len(pipeline_result.ratios)
+    assert all(0.05 <= a <= 1.0 for a in
+               pipeline_result.ratios.values())
+
+
+def test_split_decision_valid(pipeline_result):
+    r = pipeline_result
+    n = len(r.cfg.layers)
+    assert 0 <= r.split.split_point <= n
+    # the split table covers every candidate (Algorithm 1 sweep)
+    assert len(r.split.table) == n + 1
+    best = min(row["T"] for row in r.split.table)
+    assert r.split.latency["T"] == best
+
+
+def test_finetune_actually_trains():
+    cfg = tiny_cnn_config(num_classes=38, width=0.2, hw=32)
+    data = PlantVillageSynthetic(n_per_class=8, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    acc0 = evaluate_topk(params, cfg, data, ks=(1,))
+    params, hist = train_cnn(params, cfg, data, epochs=3,
+                             optimizer_name="adamw", lr=3e-3)
+    acc1 = evaluate_topk(params, cfg, data, ks=(1,))
+    assert hist[-1] < hist[0]
+    assert acc1["top1"] >= acc0["top1"]
