@@ -20,7 +20,7 @@ def save_result(name: str, payload: Dict) -> str:
 
 
 def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
-    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+    widths = {c: max([len(c)] + [len(_fmt(r.get(c))) for r in rows])
               for c in cols}
     lines = []
     if title:

@@ -76,13 +76,20 @@ def run(fast: bool = False) -> dict:
     costs = cnn_layer_costs(tcfg, masks)
     best = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(tcfg))
     execd = {}
-    for method, split, mk in [("device_only", n, None),
-                              ("server_only", 0, None),
-                              ("co_infer", best.split_point, None),
-                              ("pruned_co_infer", best.split_point, masks)]:
-        runner = CollabRunner(params, tcfg, split, PAPER_PROFILE, masks=mk)
+    for method, split, mk, kw in [
+            ("device_only", n, None, {}),
+            ("server_only", 0, None, {}),
+            ("co_infer", best.split_point, None, {}),
+            ("pruned_co_infer", best.split_point, masks, {}),
+            # fast deployment path: masks physically removed + int8 codec
+            ("compact_co_infer", best.split_point, masks,
+             dict(compact=True, codec="int8"))]:
+        runner = CollabRunner(params, tcfg, split, PAPER_PROFILE, masks=mk,
+                              **kw)
         t = runner.infer(x)["timing"]
         execd[method] = {"T_ms": t.total * 1e3, "tx_KB": t.tx_bytes / 1024}
+    assert execd["compact_co_infer"]["tx_KB"] <= \
+        execd["pruned_co_infer"]["tx_KB"] + 1e-9
     erows = [{"method": k, **v} for k, v in execd.items()]
     print(table(erows, ["method", "T_ms", "tx_KB"],
                 "Fig. 5 (executed, reduced CNN via CollabRunner)"))

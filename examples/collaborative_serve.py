@@ -4,8 +4,14 @@ edge client that runs the front sub-model, ships intermediate features over a
 bandwidth-shaped (~50 Mbps) channel, and receives logits back — for a batch
 of requests.
 
+The fast deployment path is on by default: pruning masks are physically
+compacted on both peers (--no-compact for masked-but-dense execution), the
+split-boundary features cross the wire through the chosen --codec, and
+--pipeline streams requests through EdgeClient.submit/collect so edge
+compute overlaps the network+cloud time of earlier requests.
+
     PYTHONPATH=src python examples/collaborative_serve.py [--requests 16]
-    [--bandwidth-mbps 50] [--split N]
+    [--bandwidth-mbps 50] [--split N] [--codec int8] [--pipeline]
 """
 import argparse
 import threading
@@ -14,9 +20,11 @@ import time
 import jax
 import numpy as np
 
+from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.collab.runtime import EdgeClient, serve_cloud
 from repro.core.partition.latency_model import (cnn_input_bytes,
-                                                cnn_layer_costs)
+                                                cnn_layer_costs,
+                                                compacted_cnn_layer_costs)
 from repro.core.partition.profiles import PAPER_PROFILE, LinkProfile
 from repro.core.partition.splitter import greedy_split
 from repro.core.pruning.masks import cnn_masks_from_ratios
@@ -33,6 +41,14 @@ def main():
     ap.add_argument("--port", type=int, default=29480)
     ap.add_argument("--prune", type=float, default=0.5,
                     help="preserve ratio for conv layers (1.0 = dense)")
+    ap.add_argument("--no-compact", dest="compact", action="store_false",
+                    help="run masked-but-dense instead of physically "
+                         "compacted submodels")
+    ap.add_argument("--codec", choices=list(CODEC_TX_SCALE), default="fp32",
+                    help="wire encoding of the split-boundary features")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="stream requests via submit/collect (overlapped) "
+                         "instead of one-at-a-time infer")
     args = ap.parse_args()
 
     cfg = tiny_cnn_config(num_classes=38, hw=32)
@@ -44,13 +60,18 @@ def main():
                   if s.kind == "conv" and i > 0}
         masks = cnn_masks_from_ratios(params, cfg, ratios)
 
+    compact = args.compact and masks is not None
     split = args.split
     if split is None:
-        dec = greedy_split(cnn_layer_costs(cfg, masks), PAPER_PROFILE,
-                           cnn_input_bytes(cfg))
+        costs = (compacted_cnn_layer_costs(cfg, masks) if compact
+                 else cnn_layer_costs(cfg, masks))
+        dec = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(cfg),
+                           tx_scale=CODEC_TX_SCALE[args.codec])
         split = dec.split_point
         print(f"greedy split point: c={split} "
-              f"(analytic T={dec.latency['T'] * 1e3:.2f} ms)")
+              f"({'compacted' if compact else 'masked'} shapes, "
+              f"codec={args.codec}, analytic "
+              f"T={dec.latency['T'] * 1e3:.2f} ms)")
 
     link = LinkProfile(f"{args.bandwidth_mbps} Mbps",
                        bandwidth=args.bandwidth_mbps * 1e6 / 8, rtt_s=2e-3)
@@ -58,32 +79,46 @@ def main():
     srv = threading.Thread(
         target=serve_cloud, args=(params, cfg, split, args.port),
         kwargs=dict(masks=masks, link=link, max_requests=args.requests,
-                    ready=ready), daemon=True)
+                    ready=ready, compact=compact), daemon=True)
     srv.start()
     ready.wait(10)
     client = EdgeClient(params, cfg, split, args.port, masks=masks,
-                        link=link)
+                        link=link, compact=compact, codec=args.codec,
+                        pack=not compact)
 
     print(f"serving {args.requests} requests, split c={split}, "
-          f"{args.bandwidth_mbps} Mbps link, prune={args.prune}")
-    lat, correct = [], 0
-    t0 = time.time()
+          f"{args.bandwidth_mbps} Mbps link, prune={args.prune}, "
+          f"compact={compact}, codec={args.codec}, "
+          f"pipeline={args.pipeline}")
+    images, labels = [], []
     for i in range(args.requests):
         c, idx = data.test_ids[i % len(data.test_ids)]
-        img = data._batch(np.array([[c, idx]]))["image"]
-        res = client.infer(img)
-        lat.append(res["t_edge"] + res["t_net_and_cloud"])
+        images.append(data._batch(np.array([[c, idx]]))["image"])
+        labels.append(c)
+    t0 = time.time()
+    if args.pipeline:
+        for img in images:
+            client.submit(img)
+        results = client.collect()
+    else:
+        results = [client.infer(img) for img in images]
+    wall = time.time() - t0
+    correct, lat = 0, []
+    for i, (res, c) in enumerate(zip(results, labels)):
         correct += int(np.argmax(res["logits"]) == c)
-        print(f"  req {i:2d}: {lat[-1] * 1e3:7.2f} ms "
-              f"(edge {res['t_edge'] * 1e3:6.2f} | net+cloud "
-              f"{res['t_net_and_cloud'] * 1e3:7.2f}) tx {res['tx_bytes']} B")
+        t = res.get("t_edge", 0.0) + res.get("t_net_and_cloud", 0.0)
+        lat.append(t)
+        print(f"  req {i:2d}: edge {res['t_edge'] * 1e3:6.2f} ms  "
+              f"tx {res['tx_bytes']} B")
     client.close()
     srv.join(5)
     lat = np.array(lat)
-    print(f"\nthroughput {args.requests / (time.time() - t0):.1f} req/s | "
-          f"latency mean {lat.mean() * 1e3:.2f} ms  p50 "
-          f"{np.percentile(lat, 50) * 1e3:.2f}  p95 "
-          f"{np.percentile(lat, 95) * 1e3:.2f}")
+    print(f"\nthroughput {args.requests / wall:.1f} req/s "
+          f"(wall {wall * 1e3:.1f} ms)")
+    if not args.pipeline:
+        print(f"latency mean {lat.mean() * 1e3:.2f} ms  p50 "
+              f"{np.percentile(lat, 50) * 1e3:.2f}  p95 "
+              f"{np.percentile(lat, 95) * 1e3:.2f}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,22 @@ from typing import Optional
 from repro.core.partition.profiles import LinkProfile
 
 
+def recv_exact(sock: socket.socket, n: int, chunk: int = 1 << 20) -> bytes:
+    """Read exactly n bytes from a connected socket.
+
+    ``sock.recv(n, MSG_WAITALL)`` may still return short (signal delivery,
+    platform quirks, very large n), so every frame read — shaped or not —
+    goes through this loop instead.
+    """
+    out = bytearray()
+    while len(out) < n:
+        got = sock.recv(min(chunk, n - len(out)))
+        if not got:
+            raise EOFError("peer closed")
+        out += got
+    return bytes(out)
+
+
 @dataclass
 class SimChannel:
     link: LinkProfile
@@ -62,13 +78,7 @@ class ShapedSocket:
             self.sock.sendall(piece)
 
     def recv_exact(self, n: int) -> bytes:
-        out = bytearray()
-        while len(out) < n:
-            got = self.sock.recv(min(self.chunk, n - len(out)))
-            if not got:
-                raise EOFError("peer closed")
-            out += got
-        return bytes(out)
+        return recv_exact(self.sock, n, self.chunk)
 
     def close(self) -> None:
         self.sock.close()

@@ -1,24 +1,51 @@
-"""Length-prefixed tensor framing for the edge<->cloud hop (paper §3.3:
-"intermediate features are transmitted to the cloud server through the
-socket protocol").
+"""Length-prefixed tensor framing + feature codec for the edge<->cloud hop
+(paper §3.3: "intermediate features are transmitted to the cloud server
+through the socket protocol").
 
-Frame layout:
+Raw frame layout (``encode_tensor``):
     magic  u32  = 0x52455052 ("REPR")
     ndim   u32
     dtype  16s  (numpy dtype str, ascii, NUL-padded)
     shape  ndim * u64
     nbytes u64
     payload
+
+Feature-codec frame layout (``encode_feature``), negotiated *per frame* by
+the leading magic word — a decoder calls ``decode_any`` and dispatches on
+it, so raw-fp32 and codec peers interoperate without a handshake:
+    magic  u32  = 0x46504552 ("REPF")
+    codec  u8   (0 = fp32, 1 = fp16, 2 = int8 scale+zero-point)
+    packed u8   (1 => only surviving channels of the last axis are shipped)
+    ndim   u16  (of the LOGICAL full shape)
+    shape  ndim * u64
+    [packed]  keep bitmask over the last axis, ceil(shape[-1] / 8) bytes
+    [int8]    scale f32, zero f32                  (x ~= q * scale + zero)
+    nbytes u64
+    payload
+
+``decode_feature`` always reconstructs a float32 tensor at the logical full
+shape, with zeros in the pruned (non-kept) channel slots — exactly what
+masked execution produces — so a cloud submodel is agnostic to which codec
+the edge picked for any given frame.
 """
 from __future__ import annotations
 
 import struct
-from typing import BinaryIO, Tuple
+from typing import BinaryIO, Dict, Optional, Tuple
 
 import numpy as np
 
 MAGIC = 0x52455052
+FEATURE_MAGIC = 0x46504552
 _HDR = struct.Struct("<II16s")
+_FHDR = struct.Struct("<IBBH")
+
+CODEC_IDS = {"fp32": 0, "fp16": 1, "int8": 2}
+CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
+#: wire bytes per element relative to raw fp32 — feeds the latency model's
+#: T_TX pricing (see ``split_latency(tx_scale=...)``)
+CODEC_TX_SCALE = {"fp32": 1.0, "fp16": 0.5, "int8": 0.25}
+_CODEC_DTYPE = {"fp32": np.float32, "fp16": np.float16, "int8": np.uint8}
 
 
 def encode_tensor(arr: np.ndarray) -> bytes:
@@ -44,6 +71,102 @@ def decode_tensor(buf: bytes) -> Tuple[np.ndarray, int]:
     arr = np.frombuffer(buf, dtype, count=nbytes // dtype.itemsize,
                         offset=off).reshape(shape)
     return arr, off + nbytes
+
+
+# ---------------------------------------------------------------------------
+# feature codec (fp16 / int8 quantization + mask-aware channel packing)
+# ---------------------------------------------------------------------------
+def encode_feature(arr: np.ndarray, codec: str = "fp32",
+                   keep: Optional[np.ndarray] = None) -> bytes:
+    """Encode an intermediate-feature tensor for the wire.
+
+    ``keep`` — optional surviving-unit indices along the LAST axis (from
+    ``repro.models.cnn.split_keep_indices``): only those slices are
+    shipped; the decoder zero-fills the rest. ``codec`` picks the payload
+    precision; int8 uses per-frame affine quantization (max-abs-error
+    <= scale/2 where scale = (max-min)/255).
+    """
+    if codec not in CODEC_IDS:
+        raise ValueError(f"unknown codec {codec!r} (use {list(CODEC_IDS)})")
+    full_shape = arr.shape
+    x = np.ascontiguousarray(arr, dtype=np.float32)
+    packed = keep is not None
+    if packed:
+        keep = np.asarray(keep, np.int64)
+        x = np.ascontiguousarray(x[..., keep])
+    extra = b""
+    if codec == "fp16":
+        payload_arr = x.astype(np.float16)
+    elif codec == "int8":
+        mn = float(x.min()) if x.size else 0.0
+        mx = float(x.max()) if x.size else 0.0
+        scale = (mx - mn) / 255.0 or 1.0
+        q = np.rint((x - mn) / scale)
+        payload_arr = np.clip(q, 0, 255).astype(np.uint8)
+        extra = struct.pack("<ff", scale, mn)
+    else:
+        payload_arr = x
+    payload = payload_arr.tobytes()
+    hdr = _FHDR.pack(FEATURE_MAGIC, CODEC_IDS[codec], int(packed),
+                     len(full_shape))
+    shape = struct.pack(f"<{len(full_shape)}Q", *full_shape)
+    pack_hdr = b""
+    if packed:
+        bits = np.zeros(full_shape[-1], np.uint8)
+        bits[keep] = 1
+        pack_hdr = np.packbits(bits).tobytes()
+    return (hdr + shape + pack_hdr + extra
+            + struct.pack("<Q", len(payload)) + payload)
+
+
+def decode_feature(buf: bytes) -> Tuple[np.ndarray, int]:
+    """Decode an ``encode_feature`` frame -> (float32 tensor, consumed).
+
+    Pruned channels that were packed away come back as zeros, matching
+    masked execution on the receiving submodel.
+    """
+    magic, codec_id, packed, ndim = _FHDR.unpack_from(buf, 0)
+    if magic != FEATURE_MAGIC:
+        raise ValueError("bad feature-frame magic")
+    codec = CODEC_NAMES[codec_id]
+    off = _FHDR.size
+    full_shape = struct.unpack_from(f"<{ndim}Q", buf, off)
+    off += 8 * ndim
+    keep = None
+    if packed:
+        n_mask_bytes = (full_shape[-1] + 7) // 8
+        bits = np.unpackbits(np.frombuffer(buf, np.uint8,
+                                           count=n_mask_bytes, offset=off),
+                             count=full_shape[-1])
+        keep = np.nonzero(bits)[0]
+        off += n_mask_bytes
+    scale, zero = 1.0, 0.0
+    if codec == "int8":
+        scale, zero = struct.unpack_from("<ff", buf, off)
+        off += 8
+    (nbytes,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    dtype = np.dtype(_CODEC_DTYPE[codec])
+    wire_shape = (full_shape[:-1] + (len(keep),)) if packed else full_shape
+    raw = np.frombuffer(buf, dtype, count=nbytes // dtype.itemsize,
+                        offset=off).reshape(wire_shape)
+    if codec == "int8":
+        x = raw.astype(np.float32) * scale + zero
+    else:
+        x = raw.astype(np.float32)
+    if packed:
+        out = np.zeros(full_shape, np.float32)
+        out[..., np.asarray(keep, np.int64)] = x
+        x = out
+    return x, off + nbytes
+
+
+def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:
+    """Dispatch on the frame magic: raw tensor frame or codec frame."""
+    (magic,) = struct.unpack_from("<I", buf, 0)
+    if magic == FEATURE_MAGIC:
+        return decode_feature(buf)
+    return decode_tensor(buf)
 
 
 def write_tensor(fp: BinaryIO, arr: np.ndarray) -> int:

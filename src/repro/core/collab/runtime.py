@@ -7,9 +7,23 @@ engine behind benchmarks fig5 and the Gradio-replacement CLI demo.
 ``serve_cloud`` / ``EdgeClient`` — real localhost TCP sockets with the
 token-bucket shaper, mirroring the paper's socket deployment: the edge sends
 the intermediate feature tensor, the cloud returns class logits.
+
+The *compacted deployment path* (``compact=True``): pruning masks are
+materialized via ``compact_params`` before the edge/cloud submodels are
+jitted, so the deployed network is physically smaller — real FLOP and
+wire-byte reduction rather than zeroed channels. The *feature codec*
+(``codec=`` fp32 | fp16 | int8, plus mask-aware channel ``pack``-ing for
+masked-but-dense deployments) shrinks T_TX bytes 2-4x; each frame carries
+its own codec header, so the cloud decodes whatever each edge picked
+per-frame (``decode_any``) with no connection-level handshake.
+
+For overlapped (pipelined) streaming service of many requests, see
+``repro.core.collab.streaming.StreamingCollabRunner`` (in-process) and
+``EdgeClient.submit``/``collect`` (async socket path).
 """
 from __future__ import annotations
 
+import queue
 import socket
 import struct
 import threading
@@ -22,10 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CNNConfig
-from repro.core.collab.channel import ShapedSocket, SimChannel
-from repro.core.collab.protocol import decode_tensor, encode_tensor
+from repro.core.collab.channel import ShapedSocket, SimChannel, recv_exact
+from repro.core.collab.protocol import (CODEC_TX_SCALE, decode_any,
+                                        decode_tensor, encode_feature,
+                                        encode_tensor)
 from repro.core.partition.profiles import LinkProfile, TwoTierProfile
-from repro.models.cnn import cnn_apply
+from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
 
 
 @dataclass
@@ -40,31 +56,83 @@ class RequestTiming:
         return self.t_device + self.t_tx + self.t_server
 
 
+def deploy_submodels(params, cfg: CNNConfig, masks=None,
+                     compact: bool = False):
+    """Resolve the deployed (params, cfg, masks) triple.
+
+    ``compact=True`` materializes the pruning masks via ``compact_params``:
+    the returned network is physically smaller and needs no masks at run
+    time. Both peers of a split deployment must agree on this flag (the
+    split-boundary tensor has compacted channel count)."""
+    if compact and masks:
+        cparams, ccfg = compact_params(params, cfg, masks)
+        return cparams, ccfg, None
+    return params, cfg, masks
+
+
+def build_split_fns(params, cfg: CNNConfig, split: int, masks=None,
+                    compact: bool = False, pack: bool = False):
+    """One-stop deployment resolution shared by every executor: returns
+    (edge_fn, cloud_fn, keep, deploy_cfg) for the given split.
+
+    edge_fn/cloud_fn are jitted over the *deployed* (possibly compacted)
+    submodel, or None at the c=0 / c=N extremes; ``keep`` is the
+    surviving-channel index set for the wire codec's packing — only set
+    for masked-but-dense deployments (after compaction the dead channels
+    are already gone from the tensor)."""
+    dparams, dcfg, dmasks = deploy_submodels(params, cfg, masks, compact)
+    n = len(dcfg.layers)
+    edge_fn = (jax.jit(lambda x: cnn_apply(dparams, dcfg, x, masks=dmasks,
+                                           stop_layer=split))
+               if split > 0 else None)
+    cloud_fn = (jax.jit(lambda x: cnn_apply(dparams, dcfg, jnp.asarray(x),
+                                            masks=dmasks, start_layer=split))
+                if split < n else None)
+    keep = (split_keep_indices(dcfg, dmasks, split)
+            if pack and not compact else None)
+    return edge_fn, cloud_fn, keep, dcfg
+
+
 class CollabRunner:
-    """In-process split executor with simulated (or real-time) channel."""
+    """In-process split executor with simulated (or real-time) channel.
+
+    ``compact`` deploys physically-pruned submodels; ``codec``/``pack``
+    select the wire encoding of the split-boundary feature tensor (the
+    payload is genuinely encoded and decoded, so lossy codecs see their
+    true numerical effect and tx_bytes is the true frame size).
+    """
 
     def __init__(self, params, cfg: CNNConfig, split: int,
                  profile: TwoTierProfile, masks=None,
                  realtime_channel: bool = False,
-                 simulate_compute: bool = True):
+                 simulate_compute: bool = True,
+                 compact: bool = False, codec: Optional[str] = None,
+                 pack: bool = False):
         self.cfg = cfg
         self.split = split
         self.profile = profile
         self.masks = masks
+        self.codec = codec
         self.channel = SimChannel(profile.link, realtime=realtime_channel)
         self.simulate_compute = simulate_compute
-        n = len(cfg.layers)
-        self._edge_fn = jax.jit(lambda x: cnn_apply(
-            params, cfg, x, masks=masks, stop_layer=split)) if split > 0 else None
-        self._cloud_fn = jax.jit(lambda x: cnn_apply(
-            params, cfg, x, masks=masks, start_layer=split)) if split < n else None
+        (self._edge_fn, self._cloud_fn, self._keep,
+         self.deploy_cfg) = build_split_fns(params, cfg, split, masks,
+                                            compact, pack)
         # analytic compute-time model for reporting at the paper's hardware
-        from repro.core.partition.latency_model import (cnn_layer_costs,
-                                                        split_latency,
-                                                        cnn_input_bytes)
+        from repro.core.partition.latency_model import (
+            cnn_layer_costs, compacted_cnn_layer_costs, split_latency,
+            cnn_input_bytes)
+        costs = (compacted_cnn_layer_costs(cfg, masks) if compact
+                 else cnn_layer_costs(cfg, masks))
         self._analytic = split_latency(
-            cnn_layer_costs(cfg, masks), split, profile,
-            cnn_input_bytes(cfg))
+            costs, split, profile, cnn_input_bytes(cfg),
+            tx_scale=CODEC_TX_SCALE[codec] if codec else 1.0)
+
+    def _encode(self, x: np.ndarray) -> bytes:
+        if self.codec is None and self._keep is None:
+            return x.tobytes()          # legacy raw-payload accounting
+        return encode_feature(x, codec=self.codec or "fp32",
+                              keep=self._keep if x.ndim > 1 else None)
 
     def infer(self, image: np.ndarray) -> Dict:
         """image (B, H, W, C). Returns logits + RequestTiming.
@@ -80,10 +148,12 @@ class CollabRunner:
             x = self._edge_fn(x)
             jax.block_until_ready(x)
         t1 = time.perf_counter()
-        payload = np.asarray(x)
         if self._cloud_fn is not None:
-            tx_bytes = payload.nbytes
+            buf = self._encode(np.asarray(x))
+            tx_bytes = len(buf)
             t_tx = self.channel.send(tx_bytes)
+            if self.codec is not None or self._keep is not None:
+                x = jnp.asarray(decode_any(buf)[0])
         else:
             tx_bytes, t_tx = 0, 0.0
         t2 = time.perf_counter()
@@ -107,10 +177,16 @@ class CollabRunner:
 def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 masks=None, link: Optional[LinkProfile] = None,
                 max_requests: Optional[int] = None,
-                ready: Optional[threading.Event] = None) -> None:
-    """Cloud-side loop: accept one edge connection, answer frames."""
-    cloud_fn = jax.jit(lambda x: cnn_apply(params, cfg, jnp.asarray(x),
-                                           masks=masks, start_layer=split))
+                ready: Optional[threading.Event] = None,
+                compact: bool = False) -> None:
+    """Cloud-side loop: accept one edge connection, answer frames.
+
+    Frames are decoded via ``decode_any``: the edge negotiates the codec
+    per frame through the frame header (raw fp32, fp16, int8, packed), so
+    a single server loop accepts them all. ``compact=True`` serves the
+    physically-pruned submodel (the connecting edge must match).
+    """
+    _, cloud_fn, _, _ = build_split_fns(params, cfg, split, masks, compact)
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     srv.bind(("127.0.0.1", port))
@@ -122,17 +198,12 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     served = 0
     try:
         while max_requests is None or served < max_requests:
-            if ch:
-                (n,) = struct.unpack("<Q", ch.recv_exact(8))
-                buf = ch.recv_exact(n)
-            else:
-                hdr = conn.recv(8, socket.MSG_WAITALL)
-                if not hdr:
-                    break
-                (n,) = struct.unpack("<Q", hdr)
-                buf = conn.recv(n, socket.MSG_WAITALL)
-            arr, _ = decode_tensor(buf)
-            logits = np.asarray(cloud_fn(arr))
+            rx = ch.recv_exact if ch else (lambda k: recv_exact(conn, k))
+            (n,) = struct.unpack("<Q", rx(8))
+            buf = rx(n)
+            arr, _ = decode_any(buf)
+            logits = np.asarray(cloud_fn(arr) if cloud_fn is not None
+                                else arr)      # c=N: edge sent the logits
             out = encode_tensor(logits)
             frame = struct.pack("<Q", len(out)) + out
             (ch.sendall if ch else conn.sendall)(frame)
@@ -145,17 +216,54 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
 
 
 class EdgeClient:
-    """Edge side: run layers [0, split), ship features, await logits."""
+    """Edge side: run layers [0, split), ship features, await logits.
+
+    Two call styles:
+      * ``infer(image)`` — synchronous request/response (the paper's loop);
+      * ``submit(image)`` / ``collect(count)`` — pipelined: a sender thread
+        runs edge compute + transmission while a receiver thread drains
+        responses, so edge compute of request i+1 overlaps the network and
+        cloud time of request i. Results come back in submission order.
+    Do not interleave ``infer`` with outstanding ``submit``s.
+    """
 
     def __init__(self, params, cfg: CNNConfig, split: int, port: int,
-                 masks=None, link: Optional[LinkProfile] = None):
-        self.edge_fn = (jax.jit(lambda x: cnn_apply(
-            params, cfg, x, masks=masks, stop_layer=split))
-            if split > 0 else None)
+                 masks=None, link: Optional[LinkProfile] = None,
+                 compact: bool = False, codec: Optional[str] = None,
+                 pack: bool = False):
+        self.edge_fn, _, self._keep, _ = build_split_fns(
+            params, cfg, split, masks, compact, pack)
+        self.codec = codec
         sock = socket.create_connection(("127.0.0.1", port), timeout=30)
         self.ch = ShapedSocket(sock, link) if link else None
         self.sock = sock
+        self._send_q: Optional[queue.Queue] = None
+        self._out_q: Optional[queue.Queue] = None
+        self._outstanding = 0
+        self._n_collected = 0
+        self._ready: Dict[int, Dict] = {}    # dequeued-but-not-collected
+        self._workers: List[threading.Thread] = []
 
+    # -- framing ------------------------------------------------------------
+    def _encode_frame(self, x: np.ndarray) -> bytes:
+        if self.codec is None and self._keep is None:
+            payload = encode_tensor(x)
+        else:
+            payload = encode_feature(x, codec=self.codec or "fp32",
+                                     keep=self._keep)
+        return struct.pack("<Q", len(payload)) + payload
+
+    def _send(self, frame: bytes) -> None:
+        (self.ch.sendall if self.ch else self.sock.sendall)(frame)
+
+    def _recv_response(self) -> np.ndarray:
+        rx = (self.ch.recv_exact if self.ch
+              else (lambda k: recv_exact(self.sock, k)))
+        (n,) = struct.unpack("<Q", rx(8))
+        logits, _ = decode_tensor(rx(n))
+        return logits
+
+    # -- synchronous path ---------------------------------------------------
     def infer(self, image: np.ndarray) -> Dict:
         t0 = time.perf_counter()
         x = jnp.asarray(image)
@@ -163,23 +271,100 @@ class EdgeClient:
             x = self.edge_fn(x)
             jax.block_until_ready(x)
         t1 = time.perf_counter()
-        payload = encode_tensor(np.asarray(x))
-        frame = struct.pack("<Q", len(payload)) + payload
-        if self.ch:
-            self.ch.sendall(frame)
-            (n,) = struct.unpack("<Q", self.ch.recv_exact(8))
-            buf = self.ch.recv_exact(n)
-        else:
-            self.sock.sendall(frame)
-            (n,) = struct.unpack("<Q",
-                                 self.sock.recv(8, socket.MSG_WAITALL))
-            buf = self.sock.recv(n, socket.MSG_WAITALL)
+        frame = self._encode_frame(np.asarray(x))
+        self._send(frame)
+        logits = self._recv_response()
         t2 = time.perf_counter()
-        logits, _ = decode_tensor(buf)
         return {"logits": logits,
                 "t_edge": t1 - t0,
                 "t_net_and_cloud": t2 - t1,
                 "tx_bytes": len(frame)}
 
+    # -- pipelined (async) path ---------------------------------------------
+    def _sender_loop(self) -> None:
+        while True:
+            item = self._send_q.get()
+            if item is None:
+                # forward the shutdown so the receiver stops only after
+                # every request enqueued before close() has been answered
+                self._inflight.put(None)
+                break
+            rid, image = item
+            try:
+                t0 = time.perf_counter()
+                x = jnp.asarray(image)
+                if self.edge_fn is not None:
+                    x = self.edge_fn(x)
+                    jax.block_until_ready(x)
+                t_edge = time.perf_counter() - t0
+                frame = self._encode_frame(np.asarray(x))
+                self._send(frame)
+                self._inflight.put((rid, t_edge, len(frame)))
+            except Exception as e:                      # noqa: BLE001
+                self._inflight.put((rid, e, 0))
+
+    def _receiver_loop(self) -> None:
+        while True:
+            item = self._inflight.get()
+            if item is None:
+                break
+            rid, t_edge, nbytes = item
+            if isinstance(t_edge, Exception):
+                self._out_q.put((rid, t_edge))
+                continue
+            try:
+                logits = self._recv_response()
+                self._out_q.put((rid, {"logits": logits, "t_edge": t_edge,
+                                       "tx_bytes": nbytes}))
+            except Exception as e:                      # noqa: BLE001
+                self._out_q.put((rid, e))
+
+    def submit(self, image: np.ndarray) -> int:
+        """Enqueue a request; returns its id. Blocks only while the
+        64-deep send queue is full (backpressure against a stalled link)."""
+        if self._send_q is None:
+            self._send_q = queue.Queue(maxsize=64)
+            self._inflight = queue.Queue()
+            self._out_q = queue.Queue()
+            self._workers = [threading.Thread(target=f, daemon=True)
+                             for f in (self._sender_loop,
+                                       self._receiver_loop)]
+            for w in self._workers:
+                w.start()
+        rid = self._outstanding
+        self._outstanding += 1
+        self._send_q.put((rid, image))
+        return rid
+
+    def collect(self, count: Optional[int] = None,
+                timeout: float = 60.0) -> List[Dict]:
+        """Block until ``count`` results (default: all outstanding) arrive;
+        returns them in submission order. A request that failed raises its
+        worker error (after it is consumed, so a later ``collect`` resumes
+        with the requests that followed it)."""
+        if count is None:
+            count = self._outstanding - self._n_collected
+        out: List[Dict] = []
+        while len(out) < count:
+            rid = self._n_collected          # next id in submission order
+            if rid in self._ready:
+                res = self._ready.pop(rid)
+            else:
+                got_rid, res = self._out_q.get(timeout=timeout)
+                if got_rid != rid:
+                    self._ready[got_rid] = res
+                    continue
+            self._n_collected += 1
+            if isinstance(res, Exception):
+                raise res
+            out.append(res)
+        return out
+
     def close(self) -> None:
+        if self._send_q is not None:
+            # sender forwards this sentinel to the receiver once every
+            # already-queued request has been sent (no responses dropped)
+            self._send_q.put(None)
+            for w in self._workers:
+                w.join(timeout=30)
         (self.ch or self.sock).close()

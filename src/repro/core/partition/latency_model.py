@@ -96,6 +96,17 @@ def cnn_input_bytes(cfg: CNNConfig, bytes_per_elem: int = 4) -> float:
     return h * w * cfg.input_channels * bytes_per_elem
 
 
+def compacted_cnn_layer_costs(cfg: CNNConfig, masks,
+                              bytes_per_elem: int = 4) -> List[LayerCost]:
+    """Price the *deployed* network: pruned channels physically removed
+    (``compact_cnn_config``), so FLOPs, activation bytes, and param bytes
+    reflect the compacted shapes rather than masked-but-dense execution.
+    Feed the result to ``greedy_split`` to re-pick the deployment split."""
+    from repro.models.cnn import compact_cnn_config
+    return cnn_layer_costs(compact_cnn_config(cfg, masks or {}),
+                           bytes_per_elem=bytes_per_elem)
+
+
 # ---------------------------------------------------------------------------
 # analytic costs: transformer (per decoder layer, batch=1)
 # ---------------------------------------------------------------------------
@@ -194,9 +205,15 @@ def split_latency(costs: Sequence[LayerCost], c: int,
                   profile: TwoTierProfile,
                   input_bytes: float,
                   measured_device_s: Optional[Sequence[float]] = None,
-                  measured_server_s: Optional[Sequence[float]] = None
+                  measured_server_s: Optional[Sequence[float]] = None,
+                  tx_scale: float = 1.0
                   ) -> Dict[str, float]:
-    """Latency breakdown for split point c (layers [0,c) on device)."""
+    """Latency breakdown for split point c (layers [0,c) on device).
+
+    ``tx_scale`` discounts the bytes that actually cross the link relative
+    to the fp32 activation (feature codec: 0.5 for fp16, 0.25 for int8 —
+    see ``repro.core.collab.protocol.CODEC_TX_SCALE``); compute-side memory
+    traffic is unaffected."""
     n = len(costs)
     assert 0 <= c <= n
 
@@ -212,7 +229,7 @@ def split_latency(costs: Sequence[LayerCost], c: int,
 
     t_d = seg_time(range(c), profile.device, measured_device_s)
     t_s = seg_time(range(c, n), profile.server, measured_server_s)
-    tx_bytes = input_bytes if c == 0 else costs[c - 1].out_bytes
+    tx_bytes = (input_bytes if c == 0 else costs[c - 1].out_bytes) * tx_scale
     if c == n:
         t_tx = 0.0
     else:

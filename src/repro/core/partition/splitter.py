@@ -31,14 +31,16 @@ def sweep_splits(costs: Sequence[LayerCost], profile: TwoTierProfile,
                  input_bytes: float,
                  measured_device_s: Optional[Sequence[float]] = None,
                  measured_server_s: Optional[Sequence[float]] = None,
-                 candidates: Optional[Sequence[int]] = None
+                 candidates: Optional[Sequence[int]] = None,
+                 tx_scale: float = 1.0
                  ) -> List[Dict[str, float]]:
     n = len(costs)
     cands = list(candidates) if candidates is not None else list(range(n + 1))
     table = []
     for c in cands:
         row = split_latency(costs, c, profile, input_bytes,
-                            measured_device_s, measured_server_s)
+                            measured_device_s, measured_server_s,
+                            tx_scale=tx_scale)
         row["split"] = c
         table.append(row)
     return table

@@ -1,10 +1,18 @@
 """The paper's end-to-end pipeline, reusable by examples/ and benchmarks/:
 
-  train CNN -> DDPG pruning search -> fine-tune -> greedy split -> deploy.
+  train CNN -> DDPG pruning search -> fine-tune -> greedy split ->
+  compact -> deploy.
 
 Runs at reduced scale on CPU (tiny AlexNet-family CNN + synthetic
 PlantVillage-38); every stage is the real algorithm from core/, just on a
 smaller model — see DESIGN.md §7.
+
+The deployment stage materializes the pruning masks via ``compact_params``
+(physically smaller edge/cloud submodels: real FLOP reduction, not zeroed
+channels), re-prices the per-layer costs at the *compacted* shapes with the
+chosen feature codec's wire discount, and re-picks the split point on those
+costs — the artifacts ``CollabRunner``/``EdgeClient``/``serve_cloud`` (and
+the streaming runtime) deploy.
 """
 from __future__ import annotations
 
@@ -18,15 +26,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CNNConfig
+from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.partition.latency_model import (cnn_input_bytes,
-                                                cnn_layer_costs)
+                                                cnn_layer_costs,
+                                                compacted_cnn_layer_costs)
 from repro.core.partition.profiles import PAPER_PROFILE, TwoTierProfile
 from repro.core.partition.splitter import SplitDecision, greedy_split
 from repro.core.pruning.amc_env import PruningEnv, cnn_layer_descs
 from repro.core.pruning.masks import cnn_masks_from_ratios
 from repro.core.pruning.policy import SearchResult, search_pruning_policy
 from repro.data.synthetic import PlantVillageSynthetic
-from repro.models.cnn import cnn_apply, init_cnn_params, prunable_layers
+from repro.models.cnn import (cnn_apply, compact_params, init_cnn_params,
+                              prunable_layers)
 from repro.optim import make_optimizer, step_lr
 
 
@@ -104,6 +115,11 @@ class PaperPipelineResult:
     search: SearchResult
     split: SplitDecision
     profile: TwoTierProfile
+    # deployment artifacts (compacted fast path)
+    compact_params: Optional[Dict] = None
+    compact_cfg: Optional[CNNConfig] = None
+    deploy_split: Optional[SplitDecision] = None
+    deploy_codec: str = "fp32"
 
 
 def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
@@ -113,19 +129,20 @@ def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
                        profile: TwoTierProfile = PAPER_PROFILE,
                        seed: int = 0,
                        log: Optional[Callable] = None,
-                       optimizer_name: str = "sgd", lr: float = 0.01
+                       optimizer_name: str = "sgd", lr: float = 0.01,
+                       deploy_codec: str = "fp32"
                        ) -> PaperPipelineResult:
     log = log or (lambda s: None)
     key = jax.random.PRNGKey(seed)
     params = init_cnn_params(key, cfg)
 
-    log("[1/5] train original model")
+    log("[1/6] train original model")
     params, _ = train_cnn(params, cfg, data, epochs=train_epochs, log=log,
                           lr=lr, optimizer_name=optimizer_name)
     acc0 = evaluate_topk(params, cfg, data)
     log(f"    original acc: {acc0}")
 
-    log("[2/5] DDPG pruning search (AMC, Eq. 1-4)")
+    log("[2/6] DDPG pruning search (AMC, Eq. 1-4)")
     players = prunable_layers(cfg)
     descs = cnn_layer_descs(cfg)
 
@@ -152,19 +169,19 @@ def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
     log(f"    best ratios: { {k: round(v, 3) for k, v in ratios.items()} } "
         f"flops_kept={search.best_flops_kept:.3f}")
 
-    log("[3/5] evaluate pruned model")
+    log("[3/6] evaluate pruned model")
     masks = cnn_masks_from_ratios(params, cfg, ratios)
     acc_pruned = evaluate_topk(params, cfg, data, masks=masks)
     log(f"    pruned acc: {acc_pruned}")
 
-    log("[4/5] fine-tune pruned model (SGD m=0.9, StepLR)")
+    log("[4/6] fine-tune pruned model (SGD m=0.9, StepLR)")
     ft_params, _ = train_cnn(params, cfg, data, epochs=finetune_epochs,
                              masks=masks, log=log, lr=lr * 0.3,
                              optimizer_name=optimizer_name)
     acc_ft = evaluate_topk(ft_params, cfg, data, masks=masks)
     log(f"    fine-tuned acc: {acc_ft}")
 
-    log("[5/5] greedy split search (Algorithm 1 lines 20-27)")
+    log("[5/6] greedy split search (Algorithm 1 lines 20-27)")
     costs = cnn_layer_costs(cfg, masks)
     split = greedy_split(costs, profile, cnn_input_bytes(cfg))
     log(f"    optimal split c={split.split_point} "
@@ -172,5 +189,17 @@ def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
         f"(T_D={split.latency['T_D'] * 1e3:.2f} "
         f"T_TX={split.latency['T_TX'] * 1e3:.2f} "
         f"T_S={split.latency['T_S'] * 1e3:.2f})")
+
+    log("[6/6] compact deployment + re-priced split on compacted shapes")
+    cparams, ccfg = compact_params(ft_params, cfg, masks)
+    dcosts = compacted_cnn_layer_costs(cfg, masks)
+    deploy = greedy_split(dcosts, profile, cnn_input_bytes(cfg),
+                          tx_scale=CODEC_TX_SCALE[deploy_codec])
+    log(f"    deploy split c={deploy.split_point} codec={deploy_codec} "
+        f"T={deploy.latency['T'] * 1e3:.2f} ms "
+        f"tx={deploy.latency['tx_bytes'] / 1024:.1f} KB")
     return PaperPipelineResult(cfg, ft_params, masks, acc0, acc_pruned,
-                               acc_ft, ratios, search, split, profile)
+                               acc_ft, ratios, search, split, profile,
+                               compact_params=cparams, compact_cfg=ccfg,
+                               deploy_split=deploy,
+                               deploy_codec=deploy_codec)

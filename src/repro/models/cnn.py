@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import CNNConfig, ConvLayerSpec
 
@@ -197,6 +198,60 @@ def prunable_layers(cfg: CNNConfig) -> List[int]:
     dense = [i for i, s in enumerate(cfg.layers) if s.kind == "dense"]
     out += dense[:-1]          # never prune the classifier head
     return out
+
+
+def compact_cnn_config(cfg: CNNConfig,
+                       masks: Dict[int, jnp.ndarray]) -> CNNConfig:
+    """Shape-only compaction: shrink conv out_channels / dense features to
+    the surviving counts, without touching params. The latency model prices
+    the *deployed* (physically smaller) network with this config."""
+    import dataclasses as _dc
+    new_specs = list(cfg.layers)
+    for i, spec in enumerate(cfg.layers):
+        if i not in masks:
+            continue
+        kept = int(np.sum(np.asarray(masks[i]) > 0))
+        if spec.kind == "conv":
+            new_specs[i] = ConvLayerSpec("conv", out_channels=kept,
+                                         kernel=spec.kernel,
+                                         stride=spec.stride,
+                                         padding=spec.padding)
+        elif spec.kind == "dense":
+            new_specs[i] = ConvLayerSpec("dense", features=kept)
+    return _dc.replace(cfg, layers=tuple(new_specs))
+
+
+def split_keep_indices(cfg: CNNConfig, masks: Optional[Dict[int, jnp.ndarray]],
+                       split: int) -> Optional[np.ndarray]:
+    """Surviving-unit indices along the LAST axis of the activation that
+    crosses split point ``split`` (the output of layer split-1) under masked
+    execution, or None when every unit is live.
+
+    Mirrors ``compact_params``'s carry logic: relu/pool inherit the
+    producing conv's channel mask, flatten expands it across spatial
+    positions, and an *unmasked* conv/dense mixes all inputs so nothing is
+    provably zero afterwards. Feeds the codec's channel packing — only
+    these slices need to cross the wire.
+    """
+    if split <= 0 or not masks:
+        return None
+    shapes = layer_shapes(cfg)
+    carry: Optional[np.ndarray] = None
+    for i in range(split):
+        spec = cfg.layers[i]
+        if spec.kind in ("conv", "dense"):
+            carry = (np.nonzero(np.asarray(masks[i]) > 0)[0]
+                     if i in masks else None)
+        elif spec.kind == "flatten" and carry is not None:
+            c, h, w = shapes[i - 1]
+            carry = (np.arange(h * w)[:, None] * c
+                     + carry[None, :]).reshape(-1)
+    if carry is None:
+        return None
+    # layer_shapes stores (C, H, W) for spatial layers and (F,) for flat
+    # ones; the runtime NHWC tensor's last axis is C (resp. F) either way.
+    n_full = shapes[split - 1][0]
+    return None if carry.size == n_full else carry
 
 
 def compact_params(params, cfg: CNNConfig, masks: Dict[int, jnp.ndarray]):

@@ -7,19 +7,38 @@ code can state its preferred layout unconditionally. Uneven dims are allowed
 """
 from __future__ import annotations
 
+import contextlib
+import threading
+
 import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+# jax versions without mesh axis_types (<= 0.4.x) can't tell us which axes
+# a surrounding shard_map made manual; the shard_map entry points in this
+# repo declare them here instead (trace-time, thread-local).
+_manual = threading.local()
+
+
+@contextlib.contextmanager
+def declared_manual_axes(*names):
+    old = getattr(_manual, "axes", ())
+    _manual.axes = old + tuple(names)
+    try:
+        yield
+    finally:
+        _manual.axes = old
+
 
 def _current_axes():
+    declared = getattr(_manual, "axes", ())
     # explicit-sharding mode / inside shard_map: only AUTO axes are
     # constrainable (manual axes belong to the shard_map body)
     try:
         m = jax.sharding.get_abstract_mesh()
         if m is not None and not m.empty:
             return tuple(n for n, t in zip(m.axis_names, m.axis_types)
-                         if str(t) == "Auto")
+                         if str(t) == "Auto" and n not in declared)
     except Exception:                                     # noqa: BLE001
         pass
     # classic `with mesh:` context (auto axes)
@@ -27,7 +46,7 @@ def _current_axes():
         from jax._src.mesh import thread_resources
         pm = thread_resources.env.physical_mesh
         if pm is not None and not pm.empty:
-            return tuple(pm.axis_names)
+            return tuple(n for n in pm.axis_names if n not in declared)
     except Exception:                                     # noqa: BLE001
         pass
     return ()

@@ -99,6 +99,11 @@ def test_maybe_constrain_noop_off_mesh():
 
 def test_maybe_constrain_applies_on_mesh():
     n = len(jax.devices())
+    if n < 2:
+        pytest.skip("single-device mesh: XLA folds the trivial sharding "
+                    "constraint away at lowering, so there is nothing to "
+                    "observe (run under XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N to exercise)")
     mesh = jax.sharding.Mesh(
         np.array(jax.devices()).reshape(1, n), ("data", "model"))
     seen = {}

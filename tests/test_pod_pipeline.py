@@ -73,6 +73,10 @@ _SUBPROC = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_two_pod_pipeline_matches_forward_subprocess():
+    if not hasattr(jax, "shard_map"):
+        pytest.skip("multi-pod partial-auto shard_map needs jax >= 0.5 "
+                    "(0.4.x lowers axis_index under auto axes to a "
+                    "PartitionId op the SPMD partitioner rejects)")
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", _SUBPROC], cwd=os.path.join(

@@ -10,7 +10,7 @@ import pytest
 from repro.core.pipeline import (evaluate_topk, run_paper_pipeline,
                                  train_cnn)
 from repro.data.synthetic import PlantVillageSynthetic
-from repro.models.cnn import init_cnn_params, tiny_cnn_config
+from repro.models.cnn import cnn_apply, init_cnn_params, tiny_cnn_config
 
 
 @pytest.fixture(scope="module")
@@ -56,6 +56,23 @@ def test_split_decision_valid(pipeline_result):
     assert len(r.split.table) == n + 1
     best = min(row["T"] for row in r.split.table)
     assert r.split.latency["T"] == best
+
+
+def test_deployment_artifacts_compacted(pipeline_result):
+    """Stage 6: the pipeline emits physically smaller deployment params
+    whose logits match masked execution, plus a split re-priced on the
+    compacted shapes."""
+    r = pipeline_result
+    assert r.compact_cfg is not None and r.deploy_split is not None
+    nparams = lambda p: sum(int(np.prod(v.shape))          # noqa: E731
+                            for lyr in p.values() for v in lyr.values())
+    assert nparams(r.compact_params) < nparams(r.params)
+    x = np.random.RandomState(0).rand(4, 32, 32, 3).astype(np.float32)
+    masked = np.asarray(cnn_apply(r.params, r.cfg, x, masks=r.masks))
+    compact = np.asarray(cnn_apply(r.compact_params, r.compact_cfg, x))
+    np.testing.assert_allclose(compact, masked, rtol=1e-4, atol=1e-4)
+    n = len(r.cfg.layers)
+    assert 0 <= r.deploy_split.split_point <= n
 
 
 def test_finetune_actually_trains():
