@@ -1,15 +1,16 @@
 """Streaming collab-serving throughput + feature-codec wire bytes (BENCH).
 
-Two claims of the fast deployment path, measured on this CPU:
+Two claims of the fast deployment path, measured on this CPU through the
+unified serving API (one ``DeploymentPlan``, two backends):
 
   1. *Pipelining wins*: serving a stream of requests through the
-     3-stage ``StreamingCollabRunner`` (edge ∥ link ∥ cloud, bounded
+     3-stage ``streaming`` backend (edge ∥ link ∥ cloud, bounded
      queues) yields more req/s than the paper's strictly sequential
-     loop (``CollabRunner``) over the same link, split, and model.
+     loop (the ``local`` backend) over the same plan.
   2. *The codec shrinks T_TX*: int8 + mask-aware channel packing puts
      <= 0.25-0.5x the raw fp32 bytes on the wire at the chosen split.
 
-Both runners charge the channel in real time (the link sleep is the
+Both backends charge the channel in real time (the link sleep is the
 transmission), compute is the real jitted CPU compute of the compacted
 submodels — so the sequential baseline pays T_D + T_TX + T_S per request
 while the pipeline pays ~max of the three in steady state.
@@ -22,9 +23,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import save_result, table
+from repro import serving
 from repro.core.collab.protocol import encode_feature, encode_tensor
-from repro.core.collab.runtime import CollabRunner
-from repro.core.collab.streaming import StreamingCollabRunner
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 compacted_cnn_layer_costs)
 from repro.core.partition.profiles import (LinkProfile, PAPER_PROFILE,
@@ -79,22 +79,24 @@ def run(fast: bool = False) -> dict:
     int8_packed = next(r for r in codec_rows if r["codec"] == "int8+packed")
     assert int8_packed["tx_bytes"] <= 0.5 * raw, codec_rows
 
-    # --- sequential vs pipelined serving --------------------------------
-    common = dict(masks=masks, compact=True, codec="int8")
-    seq = CollabRunner(params, cfg, split, profile,
-                       realtime_channel=True, **common)
+    # --- sequential vs pipelined serving: one plan, two backends --------
+    plan = serving.DeploymentPlan.from_args(params, cfg, split, masks=masks,
+                                            compact=True, codec="int8",
+                                            profile=profile)
+    print(plan.describe())
+    seq = serving.connect(plan, backend="local", realtime_channel=True)
     seq.infer(imgs[0])                                   # warm up the jits
     t0 = time.perf_counter()
     seq_logits = [seq.infer(img)["logits"] for img in imgs]
     seq_wall = time.perf_counter() - t0
     seq_rps = n_requests / seq_wall
 
-    pipe = StreamingCollabRunner(params, cfg, split, profile,
-                                 queue_depth=4, microbatch=1,
-                                 realtime_channel=True, **common)
-    pipe.run(imgs[:1])                                   # warm up the jits
-    rep = pipe.run(imgs)
-    for a, b in zip(seq_logits, rep.results):
+    pipe = serving.connect(plan, backend="streaming", queue_depth=4,
+                           microbatch=1, realtime_channel=True)
+    pipe.infer_many(imgs[:1])                            # warm up the jits
+    results = pipe.infer_many(imgs)
+    rep = pipe.last_report
+    for a, b in zip(seq_logits, results):
         np.testing.assert_allclose(a, b["logits"], rtol=1e-4, atol=1e-4)
 
     rows = [

@@ -3,8 +3,9 @@
     device-only / server-only / co-inference, each dense and pruned.
 
 Analytic on full AlexNet under the paper's hardware profile, plus an
-executed comparison on the reduced CNN through the CollabRunner (real
-compute on this CPU, byte-accurate simulated channel). Claims validated:
+executed comparison on the reduced CNN through the unified serving API
+(one DeploymentPlan per strategy, local backend: real compute on this
+CPU, byte-accurate simulated channel). Claims validated:
 co-inference never loses to either endpoint (they are candidates), pruning
 accelerates every strategy, and the server-only path is dominated by
 transmission (the paper's 80.78 ms story).
@@ -16,7 +17,7 @@ import numpy as np
 
 from benchmarks.common import save_result, table
 from benchmarks.table2_split_latency import _paper_masks
-from repro.core.collab.runtime import CollabRunner
+from repro import serving
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
                                                 split_latency)
@@ -84,15 +85,18 @@ def run(fast: bool = False) -> dict:
             # fast deployment path: masks physically removed + int8 codec
             ("compact_co_infer", best.split_point, masks,
              dict(compact=True, codec="int8"))]:
-        runner = CollabRunner(params, tcfg, split, PAPER_PROFILE, masks=mk,
-                              **kw)
-        t = runner.infer(x)["timing"]
-        execd[method] = {"T_ms": t.total * 1e3, "tx_KB": t.tx_bytes / 1024}
+        plan = serving.DeploymentPlan.from_args(params, tcfg, split,
+                                                masks=mk,
+                                                profile=PAPER_PROFILE, **kw)
+        with serving.connect(plan, backend="local") as sess:
+            r = sess.infer(x)
+        execd[method] = {"T_ms": r["t_total"] * 1e3,
+                         "tx_KB": r["tx_bytes"] / 1024}
     assert execd["compact_co_infer"]["tx_KB"] <= \
         execd["pruned_co_infer"]["tx_KB"] + 1e-9
     erows = [{"method": k, **v} for k, v in execd.items()]
     print(table(erows, ["method", "T_ms", "tx_KB"],
-                "Fig. 5 (executed, reduced CNN via CollabRunner)"))
+                "Fig. 5 (executed, reduced CNN via serving local backend)"))
     out = {"analytic": analytic, "executed": execd,
            "speedups": {"vs_device_only": speedup_vs_dev,
                         "vs_server_only": speedup_vs_srv},

@@ -1,35 +1,56 @@
 """End-to-end collaborative serving driver (the paper's deployment, §4.3,
-minus the Gradio front end): a cloud server process on a localhost socket, an
-edge client that runs the front sub-model, ships intermediate features over a
-bandwidth-shaped (~50 Mbps) channel, and receives logits back — for a batch
-of requests.
+minus the Gradio front end), on the unified ``repro.serving`` API: one
+``DeploymentPlan`` (model + masks + split + codec + link) deployed to both
+peers — a cloud server process on a localhost socket and an edge client
+that runs the front sub-model, ships intermediate features over a
+bandwidth-shaped (~50 Mbps) channel, and receives logits back. The
+connection opens with the HELLO handshake, so a peer loading a different
+plan is rejected instead of decoding garbage.
 
 The fast deployment path is on by default: pruning masks are physically
 compacted on both peers (--no-compact for masked-but-dense execution), the
 split-boundary features cross the wire through the chosen --codec, and
---pipeline streams requests through EdgeClient.submit/collect so edge
-compute overlaps the network+cloud time of earlier requests.
+--pipeline streams requests through the session's pipelined infer_many so
+edge compute overlaps the network+cloud time of earlier requests.
 
     PYTHONPATH=src python examples/collaborative_serve.py [--requests 16]
     [--bandwidth-mbps 50] [--split N] [--codec int8] [--pipeline]
+    [--save-plan DIR | --load-plan DIR]
 """
 import argparse
-import threading
 import time
 
 import jax
 import numpy as np
 
+from repro import serving
 from repro.core.collab.protocol import CODEC_TX_SCALE
-from repro.core.collab.runtime import EdgeClient, serve_cloud
-from repro.core.partition.latency_model import (cnn_input_bytes,
-                                                cnn_layer_costs,
-                                                compacted_cnn_layer_costs)
-from repro.core.partition.profiles import PAPER_PROFILE, LinkProfile
-from repro.core.partition.splitter import greedy_split
+from repro.core.partition.profiles import (LinkProfile, PAPER_PROFILE,
+                                           TwoTierProfile)
 from repro.core.pruning.masks import cnn_masks_from_ratios
 from repro.data.synthetic import PlantVillageSynthetic
 from repro.models.cnn import init_cnn_params, tiny_cnn_config
+
+
+def build_plan(args) -> serving.DeploymentPlan:
+    cfg = tiny_cnn_config(num_classes=38, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = None
+    if args.prune < 1.0:
+        ratios = {i: args.prune for i, s in enumerate(cfg.layers)
+                  if s.kind == "conv" and i > 0}
+        masks = cnn_masks_from_ratios(params, cfg, ratios)
+    compact = args.compact and masks is not None
+    link = LinkProfile(f"{args.bandwidth_mbps} Mbps",
+                       bandwidth=args.bandwidth_mbps * 1e6 / 8, rtt_s=2e-3)
+    profile = TwoTierProfile(PAPER_PROFILE.device, PAPER_PROFILE.server,
+                             link)
+    # split=None -> greedy optimum on the deployed (compacted/masked)
+    # shapes with the codec's wire discount priced in
+    return serving.DeploymentPlan.from_args(
+        params, cfg, args.split, masks=masks, compact=compact,
+        codec=args.codec, pack=not compact and masks is not None,
+        profile=profile, port=args.port)
 
 
 def main():
@@ -47,71 +68,60 @@ def main():
     ap.add_argument("--codec", choices=list(CODEC_TX_SCALE), default="fp32",
                     help="wire encoding of the split-boundary features")
     ap.add_argument("--pipeline", action="store_true",
-                    help="stream requests via submit/collect (overlapped) "
-                         "instead of one-at-a-time infer")
+                    help="stream requests via the session's pipelined "
+                         "infer_many instead of one-at-a-time infer")
+    ap.add_argument("--save-plan", default=None, metavar="DIR",
+                    help="export the DeploymentPlan artifact and exit")
+    ap.add_argument("--load-plan", default=None, metavar="DIR",
+                    help="serve a previously exported plan instead of "
+                         "building one")
     args = ap.parse_args()
 
-    cfg = tiny_cnn_config(num_classes=38, hw=32)
-    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    if args.load_plan:
+        plan = serving.DeploymentPlan.load(args.load_plan)
+        plan.port = args.port        # transport is not part of the contract
+        if (args.split is not None or args.codec != "fp32"
+                or not args.compact or args.prune != 0.5
+                or args.bandwidth_mbps != 50.0):
+            print("note: --load-plan serves the saved contract; "
+                  "--split/--codec/--no-compact/--prune/--bandwidth-mbps "
+                  "are ignored")
+    else:
+        plan = build_plan(args)
+    print(plan.describe())
+    bw_mbps = plan.profile.link.bandwidth * 8 / 1e6
+    if args.save_plan:
+        plan.save(args.save_plan)
+        print(f"plan exported to {args.save_plan}/ "
+              f"(serve it with --load-plan)")
+        return
+
     data = PlantVillageSynthetic(n_per_class=4, hw=32)
-    masks = None
-    if args.prune < 1.0:
-        ratios = {i: args.prune for i, s in enumerate(cfg.layers)
-                  if s.kind == "conv" and i > 0}
-        masks = cnn_masks_from_ratios(params, cfg, ratios)
-
-    compact = args.compact and masks is not None
-    split = args.split
-    if split is None:
-        costs = (compacted_cnn_layer_costs(cfg, masks) if compact
-                 else cnn_layer_costs(cfg, masks))
-        dec = greedy_split(costs, PAPER_PROFILE, cnn_input_bytes(cfg),
-                           tx_scale=CODEC_TX_SCALE[args.codec])
-        split = dec.split_point
-        print(f"greedy split point: c={split} "
-              f"({'compacted' if compact else 'masked'} shapes, "
-              f"codec={args.codec}, analytic "
-              f"T={dec.latency['T'] * 1e3:.2f} ms)")
-
-    link = LinkProfile(f"{args.bandwidth_mbps} Mbps",
-                       bandwidth=args.bandwidth_mbps * 1e6 / 8, rtt_s=2e-3)
-    ready = threading.Event()
-    srv = threading.Thread(
-        target=serve_cloud, args=(params, cfg, split, args.port),
-        kwargs=dict(masks=masks, link=link, max_requests=args.requests,
-                    ready=ready, compact=compact), daemon=True)
-    srv.start()
-    ready.wait(10)
-    client = EdgeClient(params, cfg, split, args.port, masks=masks,
-                        link=link, compact=compact, codec=args.codec,
-                        pack=not compact)
-
-    print(f"serving {args.requests} requests, split c={split}, "
-          f"{args.bandwidth_mbps} Mbps link, prune={args.prune}, "
-          f"compact={compact}, codec={args.codec}, "
-          f"pipeline={args.pipeline}")
     images, labels = [], []
     for i in range(args.requests):
         c, idx = data.test_ids[i % len(data.test_ids)]
         images.append(data._batch(np.array([[c, idx]]))["image"])
         labels.append(c)
-    t0 = time.time()
-    if args.pipeline:
-        for img in images:
-            client.submit(img)
-        results = client.collect()
-    else:
-        results = [client.infer(img) for img in images]
-    wall = time.time() - t0
+
+    print(f"serving {args.requests} requests, split c={plan.split}, "
+          f"{bw_mbps:g} Mbps link, "
+          f"masked_layers={len(plan.masks) if plan.masks else 0}, "
+          f"compact={plan.compact}, codec={plan.codec}, "
+          f"pipeline={args.pipeline}")
+    with serving.CloudServer(plan, max_requests=args.requests) as cloud:
+        with serving.connect(plan, backend="socket") as sess:
+            t0 = time.time()
+            if args.pipeline:
+                results = sess.infer_many(images)
+            else:
+                results = [sess.infer(img) for img in images]
+            wall = time.time() - t0
     correct, lat = 0, []
     for i, (res, c) in enumerate(zip(results, labels)):
         correct += int(np.argmax(res["logits"]) == c)
-        t = res.get("t_edge", 0.0) + res.get("t_net_and_cloud", 0.0)
-        lat.append(t)
+        lat.append(res["t_total"] or 0.0)
         print(f"  req {i:2d}: edge {res['t_edge'] * 1e3:6.2f} ms  "
               f"tx {res['tx_bytes']} B")
-    client.close()
-    srv.join(5)
     lat = np.array(lat)
     print(f"\nthroughput {args.requests / wall:.1f} req/s "
           f"(wall {wall * 1e3:.1f} ms)")

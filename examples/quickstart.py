@@ -7,13 +7,13 @@
 3. runs a short DDPG pruning search (AMC, paper §3.2),
 4. greedy split-point selection (Algorithm 1) under the paper's
    i7-edge / 3090-server / 50 Mbps-Wi-Fi profile,
-5. executes the split deployment in-process and prints the Eq. 5 breakdown.
+5. deploys the resulting DeploymentPlan through repro.serving and prints
+   the Eq. 5 breakdown.
 """
 import numpy as np
 
-from repro.core.collab.runtime import CollabRunner
+from repro import serving
 from repro.core.pipeline import run_paper_pipeline
-from repro.core.partition.profiles import PAPER_PROFILE
 from repro.data.synthetic import PlantVillageSynthetic
 from repro.models.cnn import tiny_cnn_config
 
@@ -36,17 +36,16 @@ def main():
           f"T_TX {res.split.latency['T_TX'] * 1e3:.2f} + "
           f"T_S {res.split.latency['T_S'] * 1e3:.2f})")
 
-    print("\n== deploy the split and serve one image ==")
-    runner = CollabRunner(res.params, cfg, res.split.split_point,
-                          PAPER_PROFILE, masks=res.masks)
-    img = data._batch(data.test_ids[:1])["image"]
-    out = runner.infer(img)
-    t = out["timing"]
+    print("\n== deploy the plan and serve one image ==")
+    print(res.plan.describe())
+    with serving.connect(res.plan, backend="local") as sess:
+        img = data._batch(data.test_ids[:1])["image"]
+        out = sess.infer(img)
     print(f"predicted class: {int(np.argmax(out['logits']))} "
           f"(true {int(data.test_ids[0][0])})")
-    print(f"T = {t.total * 1e3:.2f} ms  "
-          f"[device {t.t_device * 1e3:.2f} | tx {t.t_tx * 1e3:.2f} "
-          f"({t.tx_bytes} B) | server {t.t_server * 1e3:.2f}]")
+    print(f"T = {out['t_total'] * 1e3:.2f} ms  "
+          f"[edge {out['t_edge'] * 1e3:.2f} | net+cloud "
+          f"{out['t_upstream'] * 1e3:.2f} ({out['tx_bytes']} B)]")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,17 @@ it, so raw-fp32 and codec peers interoperate without a handshake:
 shape, with zeros in the pruned (non-kept) channel slots — exactly what
 masked execution produces — so a cloud submodel is agnostic to which codec
 the edge picked for any given frame.
+
+HELLO frame (``encode_hello``) — the deployment-contract handshake used by
+``repro.serving``: the edge sends its ``DeploymentPlan`` digest on connect
+and the cloud answers with its own digest plus an accept/reject status, so
+a split/compact/codec mismatch between peers fails fast with
+``PlanMismatchError`` instead of decoding garbage tensors:
+    magic   u32  = 0x4F4C4548 ("HELO")
+    version u16  (protocol version)
+    status  u8   (0 = ok, 1 = digest mismatch — reply only)
+    dlen    u8
+    digest  dlen bytes (ascii hex, possibly empty for legacy peers)
 """
 from __future__ import annotations
 
@@ -37,8 +48,18 @@ import numpy as np
 
 MAGIC = 0x52455052
 FEATURE_MAGIC = 0x46504552
+HELLO_MAGIC = 0x4F4C4548
+PROTOCOL_VERSION = 1
 _HDR = struct.Struct("<II16s")
 _FHDR = struct.Struct("<IBBH")
+_HELLO = struct.Struct("<IHBB")
+
+
+class PlanMismatchError(ConnectionError):
+    """The two peers of a split deployment disagree on the deployment
+    contract (plan digest): split point, compaction, codec, or model shape.
+    Raised by the HELLO handshake instead of letting the peers exchange
+    undecodable / silently-wrong feature tensors."""
 
 CODEC_IDS = {"fp32": 0, "fp16": 1, "int8": 2}
 CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
@@ -159,6 +180,33 @@ def decode_feature(buf: bytes) -> Tuple[np.ndarray, int]:
         out[..., np.asarray(keep, np.int64)] = x
         x = out
     return x, off + nbytes
+
+
+# ---------------------------------------------------------------------------
+# HELLO handshake (deployment-contract digest exchange)
+# ---------------------------------------------------------------------------
+def encode_hello(digest: str, status: int = 0,
+                 version: int = PROTOCOL_VERSION) -> bytes:
+    """Handshake frame carrying a plan digest (ascii hex, <= 255 chars)."""
+    d = digest.encode("ascii")
+    if len(d) > 255:
+        raise ValueError("digest too long for HELLO frame")
+    return _HELLO.pack(HELLO_MAGIC, version, status, len(d)) + d
+
+
+def decode_hello(buf: bytes) -> Tuple[str, int, int]:
+    """Decode a HELLO frame -> (digest, status, version)."""
+    magic, version, status, dlen = _HELLO.unpack_from(buf, 0)
+    if magic != HELLO_MAGIC:
+        raise ValueError("bad HELLO-frame magic")
+    digest = buf[_HELLO.size:_HELLO.size + dlen].decode("ascii")
+    return digest, status, version
+
+
+def is_hello(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a HELLO handshake."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == HELLO_MAGIC)
 
 
 def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:

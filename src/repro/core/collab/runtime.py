@@ -1,5 +1,16 @@
 """Collaborative split-inference executors (paper §3.3 deployment).
 
+.. note::
+   **Internal layer.** The public front door for deployment is
+   ``repro.serving``: build a ``DeploymentPlan`` (the serializable
+   deployment contract) and open an ``InferenceSession`` via
+   ``serving.connect(plan, backend="local"|"socket"|"streaming")``. The
+   raw constructors below (``CollabRunner``, ``serve_cloud``,
+   ``EdgeClient``, ``build_split_fns``) remain importable as thin
+   compatibility shims but are considered internal/deprecated as direct
+   entry points — they take the deployment contract as loose positional
+   knobs and perform no peer-agreement check.
+
 ``CollabRunner`` — in-process: edge submodel -> (shaped) channel -> cloud
 submodel, with the Eq. 5 timing breakdown measured per request. This is the
 engine behind benchmarks fig5 and the Gradio-replacement CLI demo.
@@ -37,9 +48,11 @@ import numpy as np
 
 from repro.configs.base import CNNConfig
 from repro.core.collab.channel import ShapedSocket, SimChannel, recv_exact
-from repro.core.collab.protocol import (CODEC_TX_SCALE, decode_any,
-                                        decode_tensor, encode_feature,
-                                        encode_tensor)
+from repro.core.collab.protocol import (CODEC_TX_SCALE, PROTOCOL_VERSION,
+                                        PlanMismatchError, decode_any,
+                                        decode_hello, decode_tensor,
+                                        encode_feature, encode_hello,
+                                        encode_tensor, is_hello)
 from repro.core.partition.profiles import LinkProfile, TwoTierProfile
 from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
 
@@ -56,6 +69,13 @@ class RequestTiming:
         return self.t_device + self.t_tx + self.t_server
 
 
+def _frame_io(sock: socket.socket, ch: Optional[ShapedSocket]):
+    """(recv_exact, sendall) pair for a connection, shaped or raw."""
+    rx = ch.recv_exact if ch else (lambda k: recv_exact(sock, k))
+    tx = ch.sendall if ch else sock.sendall
+    return rx, tx
+
+
 def deploy_submodels(params, cfg: CNNConfig, masks=None,
                      compact: bool = False):
     """Resolve the deployed (params, cfg, masks) triple.
@@ -64,7 +84,12 @@ def deploy_submodels(params, cfg: CNNConfig, masks=None,
     the returned network is physically smaller and needs no masks at run
     time. Both peers of a split deployment must agree on this flag (the
     split-boundary tensor has compacted channel count)."""
-    if compact and masks:
+    if compact:
+        if not masks:
+            raise ValueError(
+                "compact=True requires pruning masks: a dense model has "
+                "nothing to compact (pass compact=False, or provide the "
+                "masks the plan was pruned with)")
         cparams, ccfg = compact_params(params, cfg, masks)
         return cparams, ccfg, None
     return params, cfg, masks
@@ -178,45 +203,123 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 masks=None, link: Optional[LinkProfile] = None,
                 max_requests: Optional[int] = None,
                 ready: Optional[threading.Event] = None,
-                compact: bool = False) -> None:
-    """Cloud-side loop: accept one edge connection, answer frames.
+                compact: bool = False, host: str = "127.0.0.1",
+                max_clients: Optional[int] = 1,
+                stop: Optional[threading.Event] = None,
+                plan_digest: Optional[str] = None) -> None:
+    """Cloud-side loop: accept edge connections, answer frames.
+
+    A threaded accept loop serves each connection in its own handler
+    thread, so one cloud process serves many edges concurrently.
+    ``max_clients`` bounds how many connections are accepted before the
+    loop drains and returns (default 1 — the paper's single-edge
+    deployment and the historical behaviour); ``None`` accepts until the
+    ``stop`` event is set. ``max_requests`` is a per-connection limit.
 
     Frames are decoded via ``decode_any``: the edge negotiates the codec
     per frame through the frame header (raw fp32, fp16, int8, packed), so
     a single server loop accepts them all. ``compact=True`` serves the
     physically-pruned submodel (the connecting edge must match).
+
+    ``plan_digest`` arms the HELLO handshake: an edge that opens with a
+    HELLO frame has its plan digest compared against ours, and a mismatch
+    is answered with a reject status before the connection closes — the
+    contract check behind ``repro.serving``. Edges that skip the HELLO
+    (legacy clients) are served unchecked.
     """
     _, cloud_fn, _, _ = build_split_fns(params, cfg, split, masks, compact)
+
+    def _handle(conn: socket.socket, rec: Dict) -> None:
+        ch = ShapedSocket(conn, link) if link else None
+        rx, tx = _frame_io(conn, ch)
+        served = 0
+        try:
+            while max_requests is None or served < max_requests:
+                (n,) = struct.unpack("<Q", rx(8))
+                buf = rx(n)
+                if is_hello(buf):
+                    peer, _, pver = decode_hello(buf)
+                    ok = (pver == PROTOCOL_VERSION
+                          and (plan_digest is None or peer == plan_digest))
+                    out = encode_hello(plan_digest or "",
+                                       status=0 if ok else 1)
+                    tx(struct.pack("<Q", len(out)) + out)
+                    if not ok:
+                        return              # contract mismatch: fail fast
+                    rec["claimed"] = True   # handshake is not a request
+                    continue
+                arr, _ = decode_any(buf)
+                logits = np.asarray(cloud_fn(arr) if cloud_fn is not None
+                                    else arr)  # c=N: edge sent the logits
+                out = encode_tensor(logits)
+                tx(struct.pack("<Q", len(out)) + out)
+                served += 1
+                rec["claimed"] = True
+        except (EOFError, OSError):
+            pass
+        finally:
+            conn.close()
+
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-    srv.bind(("127.0.0.1", port))
-    srv.listen(1)
+    srv.bind((host, port))
+    srv.listen(16)
+    srv.settimeout(0.2)
     if ready is not None:
         ready.set()
-    conn, _ = srv.accept()
-    ch = ShapedSocket(conn, link) if link else None
-    served = 0
+    # (thread, conn, rec) per in-flight connection; finished handlers are
+    # reaped each loop turn. A connection "claims" a max_clients slot only
+    # once it completes a handshake or serves a request — a stray probe,
+    # a connect-and-drop, or a handshake-rejected peer can't drain a
+    # bounded server before the legitimate edge connects.
+    pending: List = []
+    done_ok = 0
     try:
-        while max_requests is None or served < max_requests:
-            rx = ch.recv_exact if ch else (lambda k: recv_exact(conn, k))
-            (n,) = struct.unpack("<Q", rx(8))
-            buf = rx(n)
-            arr, _ = decode_any(buf)
-            logits = np.asarray(cloud_fn(arr) if cloud_fn is not None
-                                else arr)      # c=N: edge sent the logits
-            out = encode_tensor(logits)
-            frame = struct.pack("<Q", len(out)) + out
-            (ch.sendall if ch else conn.sendall)(frame)
-            served += 1
-    except (EOFError, ConnectionError):
-        pass
+        while True:
+            if stop is not None and stop.is_set():
+                break
+            live = []
+            for w, c, rec in pending:
+                if w.is_alive():
+                    live.append((w, c, rec))
+                elif rec["claimed"]:
+                    done_ok += 1
+            pending = live
+            if max_clients is not None:
+                claimed = done_ok + sum(1 for _, _, rec in pending
+                                        if rec["claimed"])
+                if claimed >= max_clients:
+                    if not pending:
+                        break               # budget served and drained
+                    time.sleep(0.05)        # let in-flight handlers finish
+                    continue
+            try:
+                conn, _ = srv.accept()
+            except socket.timeout:
+                continue
+            rec = {"claimed": False}
+            w = threading.Thread(target=_handle, args=(conn, rec),
+                                 daemon=True)
+            w.start()
+            pending.append((w, conn, rec))
     finally:
-        conn.close()
         srv.close()
+        if stop is not None and stop.is_set():
+            for _, c, _ in pending:      # unblock handlers mid-recv
+                try:
+                    c.close()
+                except OSError:
+                    pass
+        for w, _, _ in pending:
+            w.join(timeout=10)
 
 
 class EdgeClient:
     """Edge side: run layers [0, split), ship features, await logits.
+
+    ``host``/``timeout`` make a real two-machine deployment expressible
+    (``repro.serving`` plumbs them from the plan's link section);
+    ``plan_digest`` arms the HELLO contract handshake against the cloud.
 
     Two call styles:
       * ``infer(image)`` — synchronous request/response (the paper's loop);
@@ -230,11 +333,13 @@ class EdgeClient:
     def __init__(self, params, cfg: CNNConfig, split: int, port: int,
                  masks=None, link: Optional[LinkProfile] = None,
                  compact: bool = False, codec: Optional[str] = None,
-                 pack: bool = False):
+                 pack: bool = False, host: str = "127.0.0.1",
+                 timeout: float = 30.0,
+                 plan_digest: Optional[str] = None):
         self.edge_fn, _, self._keep, _ = build_split_fns(
             params, cfg, split, masks, compact, pack)
         self.codec = codec
-        sock = socket.create_connection(("127.0.0.1", port), timeout=30)
+        sock = socket.create_connection((host, port), timeout=timeout)
         self.ch = ShapedSocket(sock, link) if link else None
         self.sock = sock
         self._send_q: Optional[queue.Queue] = None
@@ -243,6 +348,35 @@ class EdgeClient:
         self._n_collected = 0
         self._ready: Dict[int, Dict] = {}    # dequeued-but-not-collected
         self._workers: List[threading.Thread] = []
+        if plan_digest is not None:
+            self._handshake(plan_digest)
+
+    def _handshake(self, digest: str) -> None:
+        """HELLO exchange: send our plan digest, require the cloud's accept.
+        Raises ``PlanMismatchError`` when the peers disagree on the
+        deployment contract (or the peer cannot handshake at all)."""
+        hello = encode_hello(digest)
+        self._send(struct.pack("<Q", len(hello)) + hello)
+        try:
+            rx, _ = _frame_io(self.sock, self.ch)
+            (n,) = struct.unpack("<Q", rx(8))
+            peer, status, pver = decode_hello(rx(n))
+        except (EOFError, OSError, ValueError) as e:
+            self.sock.close()
+            raise PlanMismatchError(
+                f"cloud peer closed or answered garbage during the plan "
+                f"handshake (legacy server without HELLO support?): {e}")
+        if pver != PROTOCOL_VERSION:
+            self.sock.close()
+            raise PlanMismatchError(
+                f"handshake protocol-version mismatch: edge speaks "
+                f"v{PROTOCOL_VERSION}, cloud v{pver}")
+        if status != 0 or (peer and peer != digest):
+            self.sock.close()
+            raise PlanMismatchError(
+                f"deployment-plan mismatch: edge digest {digest!r}, "
+                f"cloud digest {peer or '<unknown>'!r} — both peers must "
+                f"load the same DeploymentPlan (split/compact/codec/model)")
 
     # -- framing ------------------------------------------------------------
     def _encode_frame(self, x: np.ndarray) -> bytes:
@@ -257,8 +391,7 @@ class EdgeClient:
         (self.ch.sendall if self.ch else self.sock.sendall)(frame)
 
     def _recv_response(self) -> np.ndarray:
-        rx = (self.ch.recv_exact if self.ch
-              else (lambda k: recv_exact(self.sock, k)))
+        rx, _ = _frame_io(self.sock, self.ch)
         (n,) = struct.unpack("<Q", rx(8))
         logits, _ = decode_tensor(rx(n))
         return logits

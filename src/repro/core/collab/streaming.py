@@ -1,5 +1,13 @@
 """Pipelined streaming collaborative-inference runtime (beyond-paper).
 
+.. note::
+   **Internal layer.** Prefer the ``repro.serving`` front door:
+   ``serving.connect(plan, backend="streaming")`` wraps
+   ``StreamingCollabRunner`` behind the unified ``InferenceSession``
+   interface and takes the whole deployment contract from one
+   ``DeploymentPlan`` instead of loose constructor knobs. The raw
+   constructor below stays as an internal/deprecated compatibility shim.
+
 The paper's deployment (and ``CollabRunner``) serves requests strictly
 sequentially: T_total = sum_i (T_D + T_TX + T_S). When requests stream,
 the three stages are independent resources — edge CPU, wireless link,

@@ -10,9 +10,11 @@ smaller model — see DESIGN.md §7.
 The deployment stage materializes the pruning masks via ``compact_params``
 (physically smaller edge/cloud submodels: real FLOP reduction, not zeroed
 channels), re-prices the per-layer costs at the *compacted* shapes with the
-chosen feature codec's wire discount, and re-picks the split point on those
-costs — the artifacts ``CollabRunner``/``EdgeClient``/``serve_cloud`` (and
-the streaming runtime) deploy.
+chosen feature codec's wire discount, re-picks the split point on those
+costs, and packages the whole deployment contract as a
+``repro.serving.DeploymentPlan`` (``result.plan``) — save it once with
+``plan.save(dir)`` and serve it anywhere via
+``serving.connect(plan, backend="local"|"socket"|"streaming")``.
 """
 from __future__ import annotations
 
@@ -39,6 +41,7 @@ from repro.data.synthetic import PlantVillageSynthetic
 from repro.models.cnn import (cnn_apply, compact_params, init_cnn_params,
                               prunable_layers)
 from repro.optim import make_optimizer, step_lr
+from repro.serving.plan import DeploymentPlan
 
 
 def _xent(logits, labels):
@@ -120,6 +123,9 @@ class PaperPipelineResult:
     compact_cfg: Optional[CNNConfig] = None
     deploy_split: Optional[SplitDecision] = None
     deploy_codec: str = "fp32"
+    # the unified deployment contract (repro.serving): save with
+    # plan.save(dir), serve with serving.connect(plan, backend=...)
+    plan: Optional[DeploymentPlan] = None
 
 
 def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
@@ -198,8 +204,12 @@ def run_paper_pipeline(cfg: CNNConfig, data: PlantVillageSynthetic,
     log(f"    deploy split c={deploy.split_point} codec={deploy_codec} "
         f"T={deploy.latency['T'] * 1e3:.2f} ms "
         f"tx={deploy.latency['tx_bytes'] / 1024:.1f} KB")
+    plan = DeploymentPlan.from_args(ft_params, cfg, deploy.split_point,
+                                    masks=masks, compact=bool(masks),
+                                    codec=deploy_codec, profile=profile)
+    log(f"    {plan.describe()}")
     return PaperPipelineResult(cfg, ft_params, masks, acc0, acc_pruned,
                                acc_ft, ratios, search, split, profile,
                                compact_params=cparams, compact_cfg=ccfg,
                                deploy_split=deploy,
-                               deploy_codec=deploy_codec)
+                               deploy_codec=deploy_codec, plan=plan)

@@ -1,0 +1,33 @@
+"""``repro.serving`` — the deployment front door (one contract, any
+backend).
+
+The paper's deployment (§3.3/§4.3) is captured as a single serializable
+artifact, ``DeploymentPlan`` (model + masks + split + wire codec + link),
+and served through one session interface::
+
+    from repro import serving
+
+    plan = serving.DeploymentPlan.from_pipeline(run_paper_pipeline(...))
+    plan.save("artifacts/deploy")                  # export once ...
+
+    plan = serving.DeploymentPlan.load("artifacts/deploy")   # ... anywhere
+    with serving.CloudServer(plan):                          # cloud peer
+        with serving.connect(plan, backend="socket") as sess:  # edge peer
+            out = sess.infer(image)                # {"logits", "t_edge", ...}
+
+Backends: ``local`` (in-process CollabRunner), ``socket`` (real TCP
+EdgeClient/serve_cloud with the HELLO digest handshake), ``streaming``
+(3-stage pipelined runtime). All take the full deployment contract from
+the plan and return the same result shape.
+"""
+from repro.core.collab.protocol import PlanMismatchError
+from repro.serving.plan import PLAN_VERSION, DeploymentPlan
+from repro.serving.session import (BACKENDS, CloudServer, InferenceSession,
+                                   LocalSession, SocketSession,
+                                   StreamingSession, connect, serve)
+
+__all__ = [
+    "BACKENDS", "PLAN_VERSION", "DeploymentPlan", "InferenceSession",
+    "LocalSession", "SocketSession", "StreamingSession", "CloudServer",
+    "PlanMismatchError", "connect", "serve",
+]

@@ -1,0 +1,233 @@
+"""``DeploymentPlan`` — the serializable deployment contract (paper §3.3).
+
+The paper's deployment is one logical object: a (possibly pruned) model, a
+split point, and a wire encoding shared by an edge and a cloud peer. This
+module captures that object as a single artifact instead of loose
+positional knobs smeared across constructors:
+
+  * ``DeploymentPlan.from_pipeline(result)`` packages what
+    ``run_paper_pipeline`` produced (fine-tuned params, masks, re-priced
+    deploy split, codec, hardware profile);
+  * ``DeploymentPlan.from_args(...)`` builds one from explicit pieces,
+    auto-picking the greedy split when ``split=None``;
+  * ``save(dir)`` / ``DeploymentPlan.load(dir)`` persist the plan — params
+    through ``repro.checkpoint.store`` (.npz + treedef JSON), masks as an
+    .npz, and the contract as ``plan.json`` — so a plan exported once can
+    be deployed anywhere with no access to the original pipeline objects;
+  * ``plan.digest`` is a stable hash of the *contract* (architecture,
+    split, masks, compact, codec, pack, version): the HELLO handshake
+    compares the two peers' digests on connect and rejects a mismatch
+    before any feature tensor is exchanged. Weights are deliberately not
+    part of the digest — a weight mismatch yields wrong predictions, not
+    undecodable tensors; the digest guards the frame/shape contract.
+
+Serve a plan through ``repro.serving.connect`` (see ``session.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.base import CNNConfig, ConvLayerSpec
+from repro.core.collab.protocol import CODEC_TX_SCALE
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                cnn_layer_costs,
+                                                compacted_cnn_layer_costs)
+from repro.core.partition.profiles import (ComputeProfile, LinkProfile,
+                                           PAPER_PROFILE, TwoTierProfile)
+from repro.core.partition.splitter import greedy_split
+from repro.models.cnn import init_cnn_params
+
+PLAN_VERSION = 1
+
+
+def _cfg_to_json(cfg: CNNConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    d["layers"] = [dataclasses.asdict(s) for s in cfg.layers]
+    return d
+
+
+def _cfg_from_json(d: Dict[str, Any]) -> CNNConfig:
+    layers = tuple(ConvLayerSpec(**s) for s in d["layers"])
+    return CNNConfig(**{**d, "layers": layers,
+                        "input_hw": tuple(d["input_hw"])})
+
+
+def _profile_to_json(p: TwoTierProfile) -> Dict[str, Any]:
+    return {"device": dataclasses.asdict(p.device),
+            "server": dataclasses.asdict(p.server),
+            "link": dataclasses.asdict(p.link)}
+
+
+def _profile_from_json(d: Dict[str, Any]) -> TwoTierProfile:
+    return TwoTierProfile(ComputeProfile(**d["device"]),
+                          ComputeProfile(**d["server"]),
+                          LinkProfile(**d["link"]))
+
+
+@dataclass
+class DeploymentPlan:
+    """One deployment contract: model + split + wire encoding + link.
+
+    ``cfg``/``params``/``masks`` are the *logical* (pre-compaction)
+    network; ``compact=True`` materializes the masks at deploy time on
+    both peers (``deploy_submodels``). ``codec``/``pack`` pick the wire
+    encoding of the split-boundary feature tensor. ``profile`` is the
+    two-tier hardware model used for analytic timing (local backend) and
+    socket shaping; ``host``/``port``/``connect_timeout_s``/``shape_link``
+    are the transport (link) section.
+    """
+    cfg: CNNConfig
+    params: Dict
+    split: int
+    masks: Optional[Dict[int, np.ndarray]] = None
+    compact: bool = False
+    codec: str = "fp32"
+    pack: bool = False
+    profile: TwoTierProfile = PAPER_PROFILE
+    host: str = "127.0.0.1"
+    port: int = 29500
+    connect_timeout_s: float = 30.0
+    shape_link: bool = True
+    version: int = PLAN_VERSION
+
+    def __post_init__(self) -> None:
+        n = len(self.cfg.layers)
+        if not 0 <= self.split <= n:
+            raise ValueError(f"split {self.split} outside [0, {n}]")
+        if self.codec not in CODEC_TX_SCALE:
+            raise ValueError(f"unknown codec {self.codec!r} "
+                             f"(use {list(CODEC_TX_SCALE)})")
+        if self.compact and not self.masks:
+            raise ValueError("compact=True requires pruning masks "
+                             "(a dense model has nothing to compact)")
+        if self.masks is not None:
+            self.masks = {int(i): np.asarray(m) for i, m in
+                          sorted(self.masks.items())}
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_args(cls, params, cfg: CNNConfig, split: Optional[int] = None,
+                  *, masks=None, compact: bool = False, codec: str = "fp32",
+                  pack: bool = False,
+                  profile: TwoTierProfile = PAPER_PROFILE,
+                  **transport) -> "DeploymentPlan":
+        """Build a plan from explicit pieces. ``split=None`` runs the
+        greedy split sweep (Algorithm 1) on the deployed shapes —
+        compacted when ``compact``, masked otherwise — with the codec's
+        wire discount priced in."""
+        if split is None:
+            costs = (compacted_cnn_layer_costs(cfg, masks)
+                     if compact and masks else cnn_layer_costs(cfg, masks))
+            split = greedy_split(costs, profile, cnn_input_bytes(cfg),
+                                 tx_scale=CODEC_TX_SCALE[codec]).split_point
+        return cls(cfg=cfg, params=params, split=int(split), masks=masks,
+                   compact=compact, codec=codec, pack=pack, profile=profile,
+                   **transport)
+
+    @classmethod
+    def from_pipeline(cls, result, *, compact: bool = True,
+                      codec: Optional[str] = None,
+                      **transport) -> "DeploymentPlan":
+        """Package a ``PaperPipelineResult``: fine-tuned params + masks,
+        the stage-6 re-priced deploy split (falling back to the stage-5
+        split for non-compact deployment), and the pipeline's profile."""
+        compact = compact and bool(result.masks)
+        dec = (result.deploy_split
+               if compact and result.deploy_split is not None
+               else result.split)
+        return cls.from_args(
+            result.params, result.cfg, dec.split_point, masks=result.masks,
+            compact=compact, codec=codec or result.deploy_codec,
+            pack=not compact and bool(result.masks),
+            profile=result.profile, **transport)
+
+    # -- contract digest ----------------------------------------------------
+    def contract(self) -> Dict[str, Any]:
+        """What both peers must agree on for frames to decode correctly."""
+        masks = None
+        if self.masks:
+            masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
+                     for i, m in self.masks.items()}
+        return {"version": self.version, "cfg": _cfg_to_json(self.cfg),
+                "split": self.split, "masks": masks,
+                "compact": self.compact, "codec": self.codec,
+                "pack": self.pack}
+
+    @property
+    def digest(self) -> str:
+        blob = json.dumps(self.contract(), sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the plan into directory ``path`` (created if missing):
+        ``plan.json`` + ``params.npz``/``params.json`` (checkpoint.store)
+        + ``masks.npz``. Returns ``path``."""
+        os.makedirs(path, exist_ok=True)
+        store.save(os.path.join(path, "params"), self.params,
+                   metadata={"digest": self.digest})
+        if self.masks:
+            np.savez(os.path.join(path, "masks.npz"),
+                     **{str(i): np.asarray(m)
+                        for i, m in self.masks.items()})
+        doc = {"version": self.version, "digest": self.digest,
+               "cfg": _cfg_to_json(self.cfg), "split": self.split,
+               "compact": self.compact, "codec": self.codec,
+               "pack": self.pack, "profile": _profile_to_json(self.profile),
+               "link": {"host": self.host, "port": self.port,
+                        "connect_timeout_s": self.connect_timeout_s,
+                        "shape_link": self.shape_link},
+               "has_masks": bool(self.masks)}
+        with open(os.path.join(path, "plan.json"), "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DeploymentPlan":
+        """Reconstruct a saved plan; verifies the stored digest still
+        matches the reconstructed contract (catches version drift or a
+        hand-edited plan.json)."""
+        with open(os.path.join(path, "plan.json")) as f:
+            doc = json.load(f)
+        cfg = _cfg_from_json(doc["cfg"])
+        template = init_cnn_params(jax.random.PRNGKey(0), cfg)
+        params = store.restore(os.path.join(path, "params"), template)
+        masks = None
+        if doc.get("has_masks"):
+            with np.load(os.path.join(path, "masks.npz")) as data:
+                masks = {int(k): data[k] for k in data.files}
+        link = doc["link"]
+        plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
+                   compact=doc["compact"], codec=doc["codec"],
+                   pack=doc["pack"],
+                   profile=_profile_from_json(doc["profile"]),
+                   host=link["host"], port=link["port"],
+                   connect_timeout_s=link["connect_timeout_s"],
+                   shape_link=link["shape_link"], version=doc["version"])
+        if plan.digest != doc["digest"]:
+            raise ValueError(
+                f"plan digest mismatch after load: stored {doc['digest']}, "
+                f"reconstructed {plan.digest} — the artifact was edited or "
+                f"written by an incompatible plan version")
+        return plan
+
+    # -- convenience --------------------------------------------------------
+    def describe(self) -> str:
+        n = len(self.cfg.layers)
+        prune = (f"{len(self.masks)} masked layers" if self.masks
+                 else "dense")
+        return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
+                f"split c={self.split}/{n}, {prune}, "
+                f"compact={self.compact}, codec={self.codec}"
+                f"{'+packed' if self.pack and not self.compact else ''}, "
+                f"link={self.host}:{self.port} "
+                f"({self.profile.link.name})")

@@ -1,0 +1,238 @@
+"""``InferenceSession`` — one session interface over three deployment
+backends, all constructed from the same ``DeploymentPlan``:
+
+  * ``connect(plan, backend="local")`` — in-process split executor
+    (``CollabRunner``): real compute, byte-accurate simulated channel,
+    analytic Eq. 5 timing. The default for benchmarks and quick checks.
+  * ``connect(plan, backend="socket")`` — a real TCP edge client
+    (``EdgeClient``) against a cloud peer started with ``serve(plan)`` /
+    ``CloudServer(plan)``. The connection opens with the HELLO handshake:
+    both peers must present the same plan digest or the session fails
+    fast with ``PlanMismatchError``.
+  * ``connect(plan, backend="streaming")`` — the 3-stage pipelined
+    in-process runtime (``StreamingCollabRunner``) for overlapped
+    service of request streams.
+
+Every backend returns the same result shape from ``infer`` /
+``infer_many``::
+
+    {"logits": np.ndarray, "t_edge": float|None, "t_upstream": float|None,
+     "t_total": float|None, "tx_bytes": int|None}
+
+where ``t_upstream`` is everything past the edge (network + cloud) and a
+``None`` marks a quantity the backend cannot attribute per request (e.g.
+per-request wall time inside the pipelined backends).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.collab.protocol import PlanMismatchError  # re-export  # noqa: F401
+from repro.core.collab.runtime import (CollabRunner, EdgeClient,
+                                       serve_cloud)
+from repro.core.collab.streaming import StreamingCollabRunner, StreamReport
+from repro.serving.plan import DeploymentPlan
+
+BACKENDS = ("local", "socket", "streaming")
+
+
+def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
+            tx_bytes: Optional[int]) -> Dict:
+    total = (None if t_edge is None or t_upstream is None
+             else t_edge + t_upstream)
+    return {"logits": np.asarray(logits), "t_edge": t_edge,
+            "t_upstream": t_upstream, "t_total": total,
+            "tx_bytes": tx_bytes}
+
+
+class InferenceSession:
+    """Base session: one deployed plan, uniform request interface."""
+
+    backend: str = "?"
+
+    def __init__(self, plan: DeploymentPlan):
+        self.plan = plan
+
+    def infer(self, image: np.ndarray) -> Dict:
+        raise NotImplementedError
+
+    def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
+        """Serve a batch of requests; pipelined backends overlap them."""
+        return [self.infer(img) for img in images]
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "InferenceSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class LocalSession(InferenceSession):
+    """In-process split executor. ``t_edge``/``t_upstream`` come from the
+    analytic hardware profile when ``simulate_compute`` (the default —
+    this container is not an i7/3090 pair); the channel term is always
+    charged per transmitted byte."""
+
+    backend = "local"
+
+    def __init__(self, plan: DeploymentPlan, *,
+                 realtime_channel: bool = False,
+                 simulate_compute: bool = True):
+        super().__init__(plan)
+        self._runner = CollabRunner(
+            plan.params, plan.cfg, plan.split, plan.profile,
+            masks=plan.masks, realtime_channel=realtime_channel,
+            simulate_compute=simulate_compute, compact=plan.compact,
+            codec=plan.codec, pack=plan.pack)
+
+    def infer(self, image: np.ndarray) -> Dict:
+        res = self._runner.infer(image)
+        t = res["timing"]
+        return _result(res["logits"], t.t_device, t.t_tx + t.t_server,
+                       t.tx_bytes)
+
+
+class SocketSession(InferenceSession):
+    """Edge side of the real-socket deployment. Requires a cloud peer
+    (``serve``/``CloudServer``) listening at the plan's link endpoint;
+    ``verify=True`` (default) runs the HELLO digest handshake."""
+
+    backend = "socket"
+
+    def __init__(self, plan: DeploymentPlan, *, verify: bool = True,
+                 host: Optional[str] = None, port: Optional[int] = None):
+        super().__init__(plan)
+        self._client = EdgeClient(
+            plan.params, plan.cfg, plan.split, port or plan.port,
+            masks=plan.masks,
+            link=plan.profile.link if plan.shape_link else None,
+            compact=plan.compact, codec=plan.codec, pack=plan.pack,
+            host=host or plan.host, timeout=plan.connect_timeout_s,
+            plan_digest=plan.digest if verify else None)
+
+    def infer(self, image: np.ndarray) -> Dict:
+        res = self._client.infer(image)
+        return _result(res["logits"], res["t_edge"],
+                       res["t_net_and_cloud"], res["tx_bytes"])
+
+    def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
+        """Pipelined submit/collect: edge compute of request i+1 overlaps
+        network + cloud time of request i. Results in submission order."""
+        for img in images:
+            self._client.submit(img)
+        out = self._client.collect(len(images))
+        return [_result(r["logits"], r["t_edge"], None, r["tx_bytes"])
+                for r in out]
+
+    def close(self) -> None:
+        self._client.close()
+
+
+class StreamingSession(InferenceSession):
+    """3-stage pipelined in-process backend (edge ∥ link ∥ cloud).
+    ``infer_many`` is the native call; the full ``StreamReport`` of the
+    last run (occupancy, throughput, wire bytes) is on ``last_report``."""
+
+    backend = "streaming"
+
+    def __init__(self, plan: DeploymentPlan, *, queue_depth: int = 4,
+                 microbatch: int = 1, realtime_channel: bool = True):
+        super().__init__(plan)
+        self._runner = StreamingCollabRunner(
+            plan.params, plan.cfg, plan.split, plan.profile,
+            masks=plan.masks, compact=plan.compact, codec=plan.codec,
+            pack=plan.pack, queue_depth=queue_depth, microbatch=microbatch,
+            realtime_channel=realtime_channel)
+        self.last_report: Optional[StreamReport] = None
+
+    def infer(self, image: np.ndarray) -> Dict:
+        return self.infer_many([image])[0]
+
+    def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
+        rep = self._runner.run(list(images))
+        self.last_report = rep
+        return [_result(r["logits"], None, None, int(r["tx_bytes"]))
+                for r in rep.results]
+
+
+def connect(plan: DeploymentPlan, backend: str = "local",
+            **opts) -> InferenceSession:
+    """Open an ``InferenceSession`` on ``plan`` with the chosen backend.
+    All backends serve the same contract and return the same result
+    shape; extra ``opts`` are backend-specific (see each session class).
+    """
+    if backend == "local":
+        return LocalSession(plan, **opts)
+    if backend == "socket":
+        return SocketSession(plan, **opts)
+    if backend == "streaming":
+        return StreamingSession(plan, **opts)
+    raise ValueError(f"unknown backend {backend!r} (use {BACKENDS})")
+
+
+def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
+          host: Optional[str] = None, max_requests: Optional[int] = None,
+          max_clients: Optional[int] = 1,
+          ready: Optional[threading.Event] = None,
+          stop: Optional[threading.Event] = None,
+          verify: bool = True) -> None:
+    """Cloud-side entry point: serve ``plan`` on its link endpoint
+    (blocking). ``max_clients=None`` + a ``stop`` event serves many edges
+    until told to quit; ``verify`` arms the HELLO digest check."""
+    serve_cloud(plan.params, plan.cfg, plan.split, port or plan.port,
+                masks=plan.masks,
+                link=plan.profile.link if plan.shape_link else None,
+                max_requests=max_requests, ready=ready,
+                compact=plan.compact, host=host or plan.host,
+                max_clients=max_clients, stop=stop,
+                plan_digest=plan.digest if verify else None)
+
+
+class CloudServer:
+    """Background cloud peer for a plan (thread wrapper around ``serve``).
+
+    >>> with CloudServer(plan, max_clients=None) as srv:
+    ...     sess = connect(plan, backend="socket")
+    """
+
+    def __init__(self, plan: DeploymentPlan, *,
+                 port: Optional[int] = None, host: Optional[str] = None,
+                 max_requests: Optional[int] = None,
+                 max_clients: Optional[int] = None, verify: bool = True,
+                 start_timeout: float = 10.0):
+        self.plan = plan
+        self._stop = threading.Event()
+        ready = threading.Event()
+        self._thread = threading.Thread(
+            target=serve, args=(plan,),
+            kwargs=dict(port=port, host=host, max_requests=max_requests,
+                        max_clients=max_clients, ready=ready,
+                        stop=self._stop, verify=verify),
+            daemon=True)
+        self._thread.start()
+        if not ready.wait(start_timeout):
+            raise TimeoutError("cloud server failed to start listening")
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        self._thread.join(timeout)
+
+    def join(self, timeout: float = 30.0) -> None:
+        """Wait for a bounded server (``max_clients`` set) to drain."""
+        self._thread.join(timeout)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def __enter__(self) -> "CloudServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

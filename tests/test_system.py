@@ -75,6 +75,22 @@ def test_deployment_artifacts_compacted(pipeline_result):
     assert 0 <= r.deploy_split.split_point <= n
 
 
+def test_pipeline_emits_deployment_plan(pipeline_result):
+    """Stage 6 packages the full deployment contract as a serveable
+    DeploymentPlan: same logits as direct masked execution."""
+    from repro import serving
+    r = pipeline_result
+    assert r.plan is not None
+    assert r.plan.split == r.deploy_split.split_point
+    assert r.plan.compact and r.plan.codec == r.deploy_codec
+    assert len(r.plan.digest) == 16
+    x = np.random.RandomState(0).rand(2, 32, 32, 3).astype(np.float32)
+    masked = np.asarray(cnn_apply(r.params, r.cfg, x, masks=r.masks))
+    with serving.connect(r.plan, backend="local") as sess:
+        out = sess.infer(x)
+    np.testing.assert_allclose(out["logits"], masked, rtol=1e-4, atol=1e-4)
+
+
 def test_finetune_actually_trains():
     cfg = tiny_cnn_config(num_classes=38, width=0.2, hw=32)
     data = PlantVillageSynthetic(n_per_class=8, hw=32)
