@@ -97,6 +97,9 @@ def run(fast: bool = False) -> dict:
     erows = [{"method": k, **v} for k, v in execd.items()]
     print(table(erows, ["method", "T_ms", "tx_KB"],
                 "Fig. 5 (executed, reduced CNN via serving local backend)"))
+    print("   (tx_KB is the uplink feature payload; T charges the "
+          "uplink + one RTT per Eq. 5 — the logits downlink is not "
+          "modelled)")
     out = {"analytic": analytic, "executed": execd,
            "speedups": {"vs_device_only": speedup_vs_dev,
                         "vs_server_only": speedup_vs_srv},

@@ -10,15 +10,16 @@ import sys
 import time
 import traceback
 
-from benchmarks import (collab_throughput, fig4_layerwise, fig5_methods,
-                        kernels_bench, roofline_report, table1_accuracy,
-                        table2_split_latency)
+from benchmarks import (adaptive_split, collab_throughput, fig4_layerwise,
+                        fig5_methods, kernels_bench, roofline_report,
+                        table1_accuracy, table2_split_latency)
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
     ("fig4_layerwise", fig4_layerwise.run),
     ("fig5_methods", fig5_methods.run),
     ("collab_throughput", collab_throughput.run),
+    ("adaptive_split", adaptive_split.run),
     ("kernels", kernels_bench.run),
     ("table1_accuracy", table1_accuracy.run),
     ("roofline", roofline_report.run),

@@ -67,6 +67,8 @@ def run(fast: bool = False) -> dict:
                     f"Table 2 (analytic, {tag} AlexNet, paper profile)"))
         print(f"   optimum: split={dec.split_point} "
               f"T={dec.latency['T'] * 1e3:.2f} ms")
+        print("   (T_TX/tx_KB are uplink-only: feature tensor + one RTT, "
+              "per Eq. 5; see latency_model.split_latency(round_trip=))")
         out_tables[tag] = {"rows": rows, "optimum": dec.split_point,
                            "T_ms": dec.latency["T"] * 1e3}
     out = {"paper_replay": {"split": c, "T_ms": t},

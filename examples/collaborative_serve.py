@@ -13,8 +13,14 @@ split-boundary features cross the wire through the chosen --codec, and
 --pipeline streams requests through the session's pipelined infer_many so
 edge compute overlaps the network+cloud time of earlier requests.
 
+Time-varying links: --trace NAME (wifi_degrading, lte_handover, ...)
+replays a canned bandwidth trace on both peers' shapers, and --adaptive
+arms the plan's adaptive section so the edge session re-splits live
+(RESPLIT frame, same connection) as the measured link drifts.
+
     PYTHONPATH=src python examples/collaborative_serve.py [--requests 16]
     [--bandwidth-mbps 50] [--split N] [--codec int8] [--pipeline]
+    [--trace wifi_degrading] [--adaptive]
     [--save-plan DIR | --load-plan DIR]
 """
 import argparse
@@ -26,7 +32,7 @@ import numpy as np
 from repro import serving
 from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.partition.profiles import (LinkProfile, PAPER_PROFILE,
-                                           TwoTierProfile)
+                                           TRACES, TwoTierProfile)
 from repro.core.pruning.masks import cnn_masks_from_ratios
 from repro.data.synthetic import PlantVillageSynthetic
 from repro.models.cnn import init_cnn_params, tiny_cnn_config
@@ -45,12 +51,17 @@ def build_plan(args) -> serving.DeploymentPlan:
                        bandwidth=args.bandwidth_mbps * 1e6 / 8, rtt_s=2e-3)
     profile = TwoTierProfile(PAPER_PROFILE.device, PAPER_PROFILE.server,
                              link)
+    adaptive = None
+    if args.adaptive:
+        # every interior split plus the endpoints is a legal landing spot
+        adaptive = serving.AdaptivePolicy(
+            candidates=tuple(range(len(cfg.layers) + 1)))
     # split=None -> greedy optimum on the deployed (compacted/masked)
     # shapes with the codec's wire discount priced in
     return serving.DeploymentPlan.from_args(
         params, cfg, args.split, masks=masks, compact=compact,
         codec=args.codec, pack=not compact and masks is not None,
-        profile=profile, port=args.port)
+        profile=profile, port=args.port, adaptive=adaptive)
 
 
 def main():
@@ -70,6 +81,12 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="stream requests via the session's pipelined "
                          "infer_many instead of one-at-a-time infer")
+    ap.add_argument("--trace", choices=sorted(TRACES), default=None,
+                    help="replay a canned time-varying link trace on the "
+                         "socket shapers instead of the fixed bandwidth")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="arm the plan's adaptive section: the session "
+                         "re-splits live as the measured link drifts")
     ap.add_argument("--save-plan", default=None, metavar="DIR",
                     help="export the DeploymentPlan artifact and exit")
     ap.add_argument("--load-plan", default=None, metavar="DIR",
@@ -103,19 +120,25 @@ def main():
         images.append(data._batch(np.array([[c, idx]]))["image"])
         labels.append(c)
 
+    trace = TRACES[args.trace] if args.trace else None
     print(f"serving {args.requests} requests, split c={plan.split}, "
-          f"{bw_mbps:g} Mbps link, "
+          f"{(trace.name if trace else f'{bw_mbps:g} Mbps')} link, "
           f"masked_layers={len(plan.masks) if plan.masks else 0}, "
           f"compact={plan.compact}, codec={plan.codec}, "
-          f"pipeline={args.pipeline}")
-    with serving.CloudServer(plan, max_requests=args.requests) as cloud:
-        with serving.connect(plan, backend="socket") as sess:
+          f"pipeline={args.pipeline}, adaptive={bool(plan.adaptive)}")
+    with serving.CloudServer(plan, max_requests=args.requests,
+                             trace=trace) as cloud:
+        with serving.connect(plan, backend="socket",
+                             trace=trace) as sess:
             t0 = time.time()
             if args.pipeline:
                 results = sess.infer_many(images)
             else:
                 results = [sess.infer(img) for img in images]
             wall = time.time() - t0
+            switches = list(sess.switches)
+    for sw in switches:
+        print("  " + sw.describe())
     correct, lat = 0, []
     for i, (res, c) in enumerate(zip(results, labels)):
         correct += int(np.argmax(res["logits"]) == c)

@@ -1,0 +1,223 @@
+"""Adaptive split control under time-varying wireless links.
+
+The paper's Algorithm 1 picks the split once, for the bandwidth measured
+at deployment time. A *wireless* link does not hold still — the edge
+device roams, the cell hands over, the evening uplink congests — and the
+greedy optimum moves with it. This module closes the loop at run time:
+
+  * ``BandwidthEstimator`` — an EWMA over the per-request uplink
+    observations every executor already produces (``tx_bytes`` payload
+    size and ``t_tx`` transmission wall-clock), yielding a running
+    estimate of the link the deployment is *actually* experiencing;
+  * ``AdaptiveSplitController`` — re-runs the Eq. 5 greedy sweep
+    (``sweep_splits``) against the measured link over the plan's
+    candidate splits and emits a ``SplitSwitch`` decision, guarded by
+    hysteresis (a switch must promise a minimum relative improvement)
+    and a dwell period (minimum requests between switches) so estimator
+    noise cannot make the partition flap;
+  * ``AdaptivePolicy`` — the serializable knobs of the above, carried in
+    ``DeploymentPlan.adaptive`` and folded into the plan digest so both
+    peers agree on the candidate set before the first RESPLIT frame.
+
+Execution of a switch lives in the runtimes: ``CollabRunner.set_split``
+(in-process) and ``EdgeClient.resplit`` (RESPLIT control frame on the
+live socket); ``repro.serving`` wires observation -> decision -> switch
+per request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import CNNConfig
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                cnn_layer_costs,
+                                                compacted_cnn_layer_costs,
+                                                wire_tx_scale)
+from repro.core.partition.profiles import LinkProfile, TwoTierProfile
+from repro.core.partition.splitter import sweep_splits
+
+
+@dataclass(frozen=True)
+class AdaptivePolicy:
+    """Serializable adaptive-split knobs (the plan's ``adaptive`` section).
+
+    ``candidates`` are the split points both peers pre-arm in their
+    ``SplitFnBank``; ``ewma_alpha``/``min_samples`` shape the bandwidth
+    estimator; ``hysteresis`` is the minimum relative latency improvement
+    a switch must promise (0.1 = predicted T at the new split must be at
+    least 10% below the current split's predicted T); ``dwell`` is the
+    minimum number of requests between switches.
+    """
+    candidates: Tuple[int, ...]
+    ewma_alpha: float = 0.4
+    min_samples: int = 2
+    hysteresis: float = 0.1
+    dwell: int = 3
+
+    def __post_init__(self) -> None:
+        if not self.candidates:
+            raise ValueError("AdaptivePolicy needs at least one candidate "
+                             "split")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.hysteresis < 0.0:
+            raise ValueError("hysteresis must be >= 0")
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"candidates": [int(c) for c in self.candidates],
+                "ewma_alpha": self.ewma_alpha,
+                "min_samples": self.min_samples,
+                "hysteresis": self.hysteresis, "dwell": self.dwell}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "AdaptivePolicy":
+        return cls(candidates=tuple(int(c) for c in d["candidates"]),
+                   ewma_alpha=d["ewma_alpha"],
+                   min_samples=d["min_samples"],
+                   hysteresis=d["hysteresis"], dwell=d["dwell"])
+
+
+class BandwidthEstimator:
+    """EWMA uplink-bandwidth estimate from per-request (bytes, seconds).
+
+    Each observation is one transmitted feature frame: ``tx_bytes``
+    payload over ``t_tx`` wall-clock. The configured ``rtt_s`` is
+    subtracted before dividing, since the per-send cost every channel
+    charges is ``bytes/bandwidth + rtt``.
+    """
+
+    def __init__(self, alpha: float = 0.4, min_samples: int = 2,
+                 rtt_s: float = 0.0):
+        self.alpha = alpha
+        self.min_samples = max(1, min_samples)
+        self.rtt_s = rtt_s
+        self.n_samples = 0
+        self._ewma: Optional[float] = None
+
+    def observe(self, tx_bytes: float, t_tx: float) -> None:
+        if tx_bytes <= 0 or t_tx <= 0:
+            return                       # edge-only request: no uplink signal
+        sample = tx_bytes / max(t_tx - self.rtt_s, 1e-9)
+        self._ewma = (sample if self._ewma is None else
+                      self.alpha * sample + (1 - self.alpha) * self._ewma)
+        self.n_samples += 1
+
+    @property
+    def ready(self) -> bool:
+        return self.n_samples >= self.min_samples
+
+    @property
+    def bandwidth(self) -> Optional[float]:
+        """Estimated uplink bytes/s, or None before the first sample."""
+        return self._ewma
+
+
+@dataclass
+class SplitSwitch:
+    """One re-split decision, for logs and benchmark tables."""
+    request_index: int
+    old_split: int
+    new_split: int
+    est_bandwidth: float            # bytes/s the decision was based on
+    current_T: float                # predicted Eq. 5 latency, old split
+    predicted_T: float              # predicted Eq. 5 latency, new split
+
+    def describe(self) -> str:
+        return (f"resplit c={self.old_split}->{self.new_split} at request "
+                f"{self.request_index} (est link "
+                f"{self.est_bandwidth * 8 / 1e6:.1f} Mbps, predicted "
+                f"{self.current_T * 1e3:.1f} -> "
+                f"{self.predicted_T * 1e3:.1f} ms)")
+
+
+class AdaptiveSplitController:
+    """Observation -> greedy re-sweep -> hysteresis-guarded switch.
+
+    ``step(tx_bytes, t_tx)`` is the per-request entry point: feed the
+    uplink observation, get back a ``SplitSwitch`` when the measured link
+    has drifted far enough that a different candidate split wins by more
+    than the hysteresis margin (and the dwell period has passed), else
+    ``None``. The caller executes the switch (``CollabRunner.set_split``
+    / ``EdgeClient.resplit``) — the controller only decides.
+    """
+
+    def __init__(self, costs, profile: TwoTierProfile, input_bytes: float,
+                 policy: AdaptivePolicy, split: int, tx_scale=1.0):
+        if split not in policy.candidates:
+            raise ValueError(f"initial split {split} not among the "
+                             f"candidates {policy.candidates}")
+        self.costs = costs
+        self.profile = profile
+        self.input_bytes = input_bytes
+        self.policy = policy
+        self.split = split
+        self.tx_scale = tx_scale            # scalar or callable(split)
+        self.estimator = BandwidthEstimator(policy.ewma_alpha,
+                                            policy.min_samples,
+                                            rtt_s=profile.link.rtt_s)
+        self.n_requests = 0
+        self._since_switch = 0
+        self.history: List[SplitSwitch] = []
+
+    @classmethod
+    def for_deployment(cls, cfg: CNNConfig, policy: AdaptivePolicy,
+                       split: int, profile: TwoTierProfile, masks=None,
+                       compact: bool = False, codec: Optional[str] = None,
+                       pack: bool = False) -> "AdaptiveSplitController":
+        """Build the controller for a concrete deployment: layer costs
+        priced on the deployed (compacted/masked) shapes and a
+        per-candidate ``wire_tx_scale`` so predicted T_TX matches what the
+        runtime will actually put on the wire at each candidate."""
+        costs = (compacted_cnn_layer_costs(cfg, masks) if compact
+                 else cnn_layer_costs(cfg, masks))
+        return cls(costs, profile, cnn_input_bytes(cfg), policy, split,
+                   tx_scale=lambda c: wire_tx_scale(
+                       cfg, masks, c, codec=codec, pack=pack,
+                       compact=compact))
+
+    def observe(self, tx_bytes: float, t_tx: float) -> None:
+        self.estimator.observe(tx_bytes, t_tx)
+        self.n_requests += 1
+        self._since_switch += 1
+
+    def note_external_switch(self, split: int) -> None:
+        """Adopt a split executed outside the controller (a manual
+        ``resplit``) and restart the dwell window, so the controller does
+        not immediately overrule the override on the next request."""
+        self.split = split
+        self._since_switch = 0
+
+    def sweep(self, bandwidth: float) -> List[Dict[str, float]]:
+        """The Eq. 5 greedy sweep over the candidates at ``bandwidth``."""
+        link = LinkProfile(f"measured {bandwidth * 8 / 1e6:.1f} Mbps",
+                           bandwidth=bandwidth,
+                           rtt_s=self.profile.link.rtt_s)
+        prof = TwoTierProfile(self.profile.device, self.profile.server,
+                              link)
+        return sweep_splits(self.costs, prof, self.input_bytes,
+                            candidates=self.policy.candidates,
+                            tx_scale=self.tx_scale)
+
+    def maybe_switch(self) -> Optional[SplitSwitch]:
+        if not self.estimator.ready or self._since_switch < self.policy.dwell:
+            return None
+        bw = self.estimator.bandwidth
+        table = self.sweep(bw)
+        best = min(table, key=lambda r: r["T"])
+        cur = next(r for r in table if r["split"] == self.split)
+        if best["split"] == self.split:
+            return None
+        if best["T"] > (1.0 - self.policy.hysteresis) * cur["T"]:
+            return None                  # not enough predicted win: hold
+        sw = SplitSwitch(self.n_requests, self.split, int(best["split"]),
+                         bw, cur["T"], best["T"])
+        self.split = sw.new_split
+        self._since_switch = 0
+        self.history.append(sw)
+        return sw
+
+    def step(self, tx_bytes: float, t_tx: float) -> Optional[SplitSwitch]:
+        """Feed one request's uplink observation; maybe decide a switch."""
+        self.observe(tx_bytes, t_tx)
+        return self.maybe_switch()

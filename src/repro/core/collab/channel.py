@@ -4,6 +4,15 @@
 sleep it away for realistic end-to-end demos). ``ShapedSocket`` wraps a real
 TCP socket with a token-bucket rate limiter, so the localhost demo in
 examples/collaborative_serve.py actually experiences ~50 Mbps.
+
+Both channels accept a ``LinkTrace`` (``repro.core.partition.profiles``)
+for *time-varying* links: ``SimChannel`` keeps a virtual clock and charges
+each transmission piecewise against the trace segments it straddles (a
+send that starts on 50 Mbps and ends on 5 Mbps pays exactly the blended
+cost), while ``ShapedSocket`` refills its token bucket at whatever rate
+the trace dictates at the current wall-clock offset. The per-send cost is
+therefore a *measurement* of the link as it is right now — the signal the
+adaptive split controller estimates bandwidth from.
 """
 from __future__ import annotations
 
@@ -12,7 +21,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.partition.profiles import LinkProfile
+from repro.core.partition.profiles import LinkProfile, LinkTrace
 
 
 def recv_exact(sock: socket.socket, n: int, chunk: int = 1 << 20) -> bytes:
@@ -33,13 +42,52 @@ def recv_exact(sock: socket.socket, n: int, chunk: int = 1 << 20) -> bytes:
 
 @dataclass
 class SimChannel:
+    """Analytic byte channel with an optional time-varying link.
+
+    With ``trace`` set, ``elapsed_s`` is the virtual deployment clock: each
+    ``send`` drains bytes segment-by-segment from the trace starting at the
+    current clock, and ``advance`` moves the clock across non-transmission
+    time (edge/cloud compute) so the link keeps degrading while the radio
+    is idle. Without a trace this is the original fixed-``link`` channel.
+    """
     link: LinkProfile
     realtime: bool = False
+    trace: Optional[LinkTrace] = None
     sent_bytes: int = 0
     elapsed_s: float = 0.0
 
+    def link_now(self) -> LinkProfile:
+        """The link state at the current virtual clock."""
+        if self.trace is None:
+            return self.link
+        return self.trace.link_at(self.elapsed_s)
+
+    def advance(self, dt: float) -> None:
+        """Advance the virtual clock without transmitting (compute time)."""
+        if dt > 0:
+            self.elapsed_s += dt
+
+    def _trace_send_time(self, nbytes: int) -> float:
+        bw, rtt, _ = self.trace.span_at(self.elapsed_s)
+        t, now, remaining = rtt, self.elapsed_s + rtt, float(nbytes)
+        while remaining > 0:
+            bw, _, span = self.trace.span_at(now)
+            can = bw * span                 # bytes this segment can carry
+            if can >= remaining:
+                dt = remaining / bw
+                remaining = 0.0
+            else:
+                dt = span
+                remaining -= can
+            t += dt
+            now += dt
+        return t
+
     def send(self, nbytes: int) -> float:
-        t = nbytes / self.link.bandwidth + self.link.rtt_s
+        if self.trace is None:
+            t = nbytes / self.link.bandwidth + self.link.rtt_s
+        else:
+            t = self._trace_send_time(nbytes)
         self.sent_bytes += nbytes
         self.elapsed_s += t
         if self.realtime:
@@ -48,23 +96,48 @@ class SimChannel:
 
 
 class ShapedSocket:
-    """Token-bucket pacing on top of a connected socket (both directions)."""
+    """Token-bucket pacing on top of a connected socket (both directions).
+
+    With a ``trace``, the refill rate follows the trace at the wall-clock
+    offset since construction — the socket path's stand-in for a link that
+    degrades mid-deployment.
+
+    ``last_send_cost_s`` is the *modeled* link cost of the most recent
+    ``sendall`` (bytes over the shaped bandwidth at send time, plus one
+    RTT). The wall-clock a send took is a poor bandwidth signal here — the
+    token bucket deliberately lets small frames burst through unpaced — so
+    the adaptive estimator reads this modeled cost instead, which tracks
+    whatever the (possibly trace-driven) shaper is currently enforcing.
+    """
 
     def __init__(self, sock: socket.socket, link: LinkProfile,
-                 chunk: int = 16384):
+                 chunk: int = 16384, trace: Optional[LinkTrace] = None):
         self.sock = sock
         self.link = link
         self.chunk = chunk
+        self.trace = trace
         self._budget = 0.0
-        self._last = time.perf_counter()
+        self._t0 = time.perf_counter()
+        self._last = self._t0
+        self.last_send_cost_s = 0.0
+
+    def _state(self, now: float):
+        """(bandwidth, rtt_s) the shaper is enforcing right now."""
+        if self.trace is None:
+            return self.link.bandwidth, self.link.rtt_s
+        return self.trace.state_at(now - self._t0)
+
+    def _bandwidth(self, now: float) -> float:
+        return self._state(now)[0]
 
     def _pace(self, nbytes: int) -> None:
         now = time.perf_counter()
-        self._budget += (now - self._last) * self.link.bandwidth
-        self._budget = min(self._budget, self.link.bandwidth * 0.05)
+        bw = self._bandwidth(now)
+        self._budget += (now - self._last) * bw
+        self._budget = min(self._budget, bw * 0.05)
         self._last = now
         if nbytes > self._budget:
-            need = (nbytes - self._budget) / self.link.bandwidth
+            need = (nbytes - self._budget) / bw
             time.sleep(need)
             self._last = time.perf_counter()
             self._budget = 0.0
@@ -72,10 +145,14 @@ class ShapedSocket:
             self._budget -= nbytes
 
     def sendall(self, data: bytes) -> None:
+        cost, rtt = 0.0, 0.0
         for i in range(0, len(data), self.chunk):
             piece = data[i:i + self.chunk]
             self._pace(len(piece))
             self.sock.sendall(piece)
+            bw, rtt = self._state(time.perf_counter())
+            cost += len(piece) / bw
+        self.last_send_cost_s = cost + rtt
 
     def recv_exact(self, n: int) -> bytes:
         return recv_exact(self.sock, n, self.chunk)

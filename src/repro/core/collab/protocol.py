@@ -38,6 +38,16 @@ a split/compact/codec mismatch between peers fails fast with
     status  u8   (0 = ok, 1 = digest mismatch — reply only)
     dlen    u8
     digest  dlen bytes (ascii hex, possibly empty for legacy peers)
+
+RESPLIT frame (``encode_resplit``) — the live split-switch announcement
+used by the adaptive controller: mid-connection, the edge proposes a new
+split point and the cloud answers with accept/reject, after which both
+peers swap their jitted sub-models *without reconnecting* (the cloud's
+``start_layer`` becomes the edge's ``stop_layer``). Versioned like HELLO:
+    magic   u32  = 0x4C505352 ("RSPL")
+    version u16  (protocol version)
+    status  u8   (0 = ok, 1 = split rejected — reply only)
+    split   u16  (the proposed / acknowledged split point)
 """
 from __future__ import annotations
 
@@ -49,10 +59,12 @@ import numpy as np
 MAGIC = 0x52455052
 FEATURE_MAGIC = 0x46504552
 HELLO_MAGIC = 0x4F4C4548
+RESPLIT_MAGIC = 0x4C505352
 PROTOCOL_VERSION = 1
 _HDR = struct.Struct("<II16s")
 _FHDR = struct.Struct("<IBBH")
 _HELLO = struct.Struct("<IHBB")
+_RESPLIT = struct.Struct("<IHBH")
 
 
 class PlanMismatchError(ConnectionError):
@@ -207,6 +219,32 @@ def is_hello(buf: bytes) -> bool:
     """True when the frame's leading magic marks a HELLO handshake."""
     return (len(buf) >= 4
             and struct.unpack_from("<I", buf, 0)[0] == HELLO_MAGIC)
+
+
+# ---------------------------------------------------------------------------
+# RESPLIT control frame (live split-switch, no reconnect)
+# ---------------------------------------------------------------------------
+def encode_resplit(split: int, status: int = 0,
+                   version: int = PROTOCOL_VERSION) -> bytes:
+    """Control frame proposing (edge) or acknowledging (cloud) a new split
+    point on the live connection."""
+    if not 0 <= split <= 0xFFFF:
+        raise ValueError(f"split {split} outside the u16 frame field")
+    return _RESPLIT.pack(RESPLIT_MAGIC, version, status, split)
+
+
+def decode_resplit(buf: bytes) -> Tuple[int, int, int]:
+    """Decode a RESPLIT frame -> (split, status, version)."""
+    magic, version, status, split = _RESPLIT.unpack_from(buf, 0)
+    if magic != RESPLIT_MAGIC:
+        raise ValueError("bad RESPLIT-frame magic")
+    return split, status, version
+
+
+def is_resplit(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a RESPLIT control frame."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == RESPLIT_MAGIC)
 
 
 def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:

@@ -31,6 +31,21 @@ per-frame (``decode_any``) with no connection-level handshake.
 For overlapped (pipelined) streaming service of many requests, see
 ``repro.core.collab.streaming.StreamingCollabRunner`` (in-process) and
 ``EdgeClient.submit``/``collect`` (async socket path).
+
+*Adaptive split switching*: every executor resolves its sub-model
+functions through a ``SplitFnBank`` — one deployed parameter set, a
+jitted (edge_fn, cloud_fn) pair per candidate split — so changing the
+split point at run time is a dictionary lookup, not a redeploy. The
+socket pair switches live via the RESPLIT control frame
+(``EdgeClient.resplit``): the edge announces the new split, the cloud
+swaps its ``start_layer`` on the same connection, and the next request
+already flows at the new partition. The decision logic (bandwidth
+estimation + hysteresis) lives in ``repro.core.collab.adaptive``.
+
+``tx_bytes`` is the transmitted frame *payload* in bytes — identical
+across CollabRunner, EdgeClient, and the streaming runtime for the same
+deployment; the socket executors' 8-byte length prefix is framing, not
+payload, and is excluded.
 """
 from __future__ import annotations
 
@@ -40,7 +55,7 @@ import struct
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,10 +65,12 @@ from repro.configs.base import CNNConfig
 from repro.core.collab.channel import ShapedSocket, SimChannel, recv_exact
 from repro.core.collab.protocol import (CODEC_TX_SCALE, PROTOCOL_VERSION,
                                         PlanMismatchError, decode_any,
-                                        decode_hello, decode_tensor,
-                                        encode_feature, encode_hello,
-                                        encode_tensor, is_hello)
-from repro.core.partition.profiles import LinkProfile, TwoTierProfile
+                                        decode_hello, decode_resplit,
+                                        decode_tensor, encode_feature,
+                                        encode_hello, encode_resplit,
+                                        encode_tensor, is_hello, is_resplit)
+from repro.core.partition.profiles import (LinkProfile, LinkTrace,
+                                           TwoTierProfile)
 from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
 
 
@@ -95,27 +112,80 @@ def deploy_submodels(params, cfg: CNNConfig, masks=None,
     return params, cfg, masks
 
 
+class SplitFnBank:
+    """Jitted edge/cloud sub-model functions for *every* candidate split
+    of one deployed network.
+
+    The deployment (params, cfg, masks, compaction) is resolved once; each
+    split's (edge_fn, cloud_fn, keep) triple is built on first request and
+    cached, so an adaptive controller can switch splits mid-run with a
+    dictionary lookup instead of a redeploy. Both peers of a socket
+    deployment hold a bank over the same params, which is what makes the
+    RESPLIT frame sufficient to move the partition without reconnecting.
+    """
+
+    def __init__(self, params, cfg: CNNConfig, masks=None,
+                 compact: bool = False, pack: bool = False):
+        (self.dparams, self.deploy_cfg,
+         self.dmasks) = deploy_submodels(params, cfg, masks, compact)
+        self.pack = pack
+        self.compact = compact
+        self.n_layers = len(self.deploy_cfg.layers)
+        self._fns: Dict[int, Tuple] = {}
+
+    def get(self, split: int):
+        """(edge_fn, cloud_fn, keep) for ``split``; fns are None at the
+        c=0 / c=N extremes. ``keep`` is the surviving-channel index set
+        for the wire codec's packing — only set for masked-but-dense
+        deployments (after compaction the dead channels are already gone
+        from the tensor)."""
+        if not 0 <= split <= self.n_layers:
+            raise ValueError(f"split {split} outside [0, {self.n_layers}]")
+        if split not in self._fns:
+            dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
+            edge_fn = (jax.jit(lambda x: cnn_apply(
+                dparams, dcfg, x, masks=dmasks, stop_layer=split))
+                if split > 0 else None)
+            cloud_fn = (jax.jit(lambda x: cnn_apply(
+                dparams, dcfg, jnp.asarray(x), masks=dmasks,
+                start_layer=split))
+                if split < self.n_layers else None)
+            keep = (split_keep_indices(dcfg, dmasks, split)
+                    if self.pack and not self.compact else None)
+            self._fns[split] = (edge_fn, cloud_fn, keep)
+        return self._fns[split]
+
+    def warm(self, splits: Sequence[int], image: np.ndarray,
+             edge_only: bool = False) -> None:
+        """Pre-jit (trace + compile) the edge/cloud pair of each candidate
+        split by pushing one sample through, so a mid-run switch does not
+        stall the first request at the new partition. ``edge_only`` skips
+        compiling the cloud halves (the edge peer of a socket deployment
+        never runs them)."""
+        for c in splits:
+            edge_fn, cloud_fn, _ = self.get(c)
+            x = jnp.asarray(image)
+            if edge_fn is not None:
+                x = edge_fn(x)
+            if cloud_fn is not None and not edge_only:
+                x = cloud_fn(x)
+            jax.block_until_ready(x)
+
+
+def _warm_input(cfg: CNNConfig) -> np.ndarray:
+    """A zero batch-1 sample at the model's input shape, for pre-jitting."""
+    h, w = cfg.input_hw
+    return np.zeros((1, h, w, cfg.input_channels), np.float32)
+
+
 def build_split_fns(params, cfg: CNNConfig, split: int, masks=None,
                     compact: bool = False, pack: bool = False):
     """One-stop deployment resolution shared by every executor: returns
-    (edge_fn, cloud_fn, keep, deploy_cfg) for the given split.
-
-    edge_fn/cloud_fn are jitted over the *deployed* (possibly compacted)
-    submodel, or None at the c=0 / c=N extremes; ``keep`` is the
-    surviving-channel index set for the wire codec's packing — only set
-    for masked-but-dense deployments (after compaction the dead channels
-    are already gone from the tensor)."""
-    dparams, dcfg, dmasks = deploy_submodels(params, cfg, masks, compact)
-    n = len(dcfg.layers)
-    edge_fn = (jax.jit(lambda x: cnn_apply(dparams, dcfg, x, masks=dmasks,
-                                           stop_layer=split))
-               if split > 0 else None)
-    cloud_fn = (jax.jit(lambda x: cnn_apply(dparams, dcfg, jnp.asarray(x),
-                                            masks=dmasks, start_layer=split))
-                if split < n else None)
-    keep = (split_keep_indices(dcfg, dmasks, split)
-            if pack and not compact else None)
-    return edge_fn, cloud_fn, keep, dcfg
+    (edge_fn, cloud_fn, keep, deploy_cfg) for the given split (one-shot
+    wrapper over ``SplitFnBank``)."""
+    bank = SplitFnBank(params, cfg, masks, compact, pack)
+    edge_fn, cloud_fn, keep = bank.get(split)
+    return edge_fn, cloud_fn, keep, bank.deploy_cfg
 
 
 class CollabRunner:
@@ -132,26 +202,46 @@ class CollabRunner:
                  realtime_channel: bool = False,
                  simulate_compute: bool = True,
                  compact: bool = False, codec: Optional[str] = None,
-                 pack: bool = False):
+                 pack: bool = False, trace: Optional[LinkTrace] = None):
         self.cfg = cfg
         self.split = split
         self.profile = profile
         self.masks = masks
         self.codec = codec
-        self.channel = SimChannel(profile.link, realtime=realtime_channel)
+        self.compact = compact
+        self.pack = pack
+        self.channel = SimChannel(profile.link, realtime=realtime_channel,
+                                  trace=trace)
         self.simulate_compute = simulate_compute
-        (self._edge_fn, self._cloud_fn, self._keep,
-         self.deploy_cfg) = build_split_fns(params, cfg, split, masks,
-                                            compact, pack)
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+        self.deploy_cfg = self._bank.deploy_cfg
+        self.set_split(split)
+
+    def warm(self, splits: Sequence[int]) -> None:
+        """Pre-jit every candidate's edge/cloud pair (batch-1 shape) so an
+        adaptive switch doesn't stall its first request on compilation."""
+        self._bank.warm(splits, _warm_input(self.cfg))
+
+    def set_split(self, split: int) -> None:
+        """Move the partition point (adaptive re-split): swap in the
+        bank's jitted pair for ``split`` and re-price the analytic
+        breakdown. The channel (and its virtual trace clock) carries over
+        — the link doesn't reset because the deployment re-planned."""
+        self._edge_fn, self._cloud_fn, self._keep = self._bank.get(split)
+        self.split = split
         # analytic compute-time model for reporting at the paper's hardware
         from repro.core.partition.latency_model import (
             cnn_layer_costs, compacted_cnn_layer_costs, split_latency,
-            cnn_input_bytes)
-        costs = (compacted_cnn_layer_costs(cfg, masks) if compact
-                 else cnn_layer_costs(cfg, masks))
+            cnn_input_bytes, wire_tx_scale)
+        costs = (compacted_cnn_layer_costs(self.cfg, self.masks)
+                 if self.compact else cnn_layer_costs(self.cfg, self.masks))
+        # tx_scale composes the codec discount with the packing correction
+        # so the analytic tx_bytes equals the measured wire payload
         self._analytic = split_latency(
-            costs, split, profile, cnn_input_bytes(cfg),
-            tx_scale=CODEC_TX_SCALE[codec] if codec else 1.0)
+            costs, split, self.profile, cnn_input_bytes(self.cfg),
+            tx_scale=wire_tx_scale(self.cfg, self.masks, split,
+                                   codec=self.codec, pack=self.pack,
+                                   compact=self.compact))
 
     def _encode(self, x: np.ndarray) -> bytes:
         if self.codec is None and self._keep is None:
@@ -173,6 +263,11 @@ class CollabRunner:
             x = self._edge_fn(x)
             jax.block_until_ready(x)
         t1 = time.perf_counter()
+        # a trace-driven channel keeps degrading during compute, so the
+        # virtual clock must advance across the device time too
+        if self.channel.trace is not None:
+            self.channel.advance(self._analytic["T_D"] if
+                                 self.simulate_compute else t1 - t0)
         if self._cloud_fn is not None:
             buf = self._encode(np.asarray(x))
             tx_bytes = len(buf)
@@ -187,6 +282,9 @@ class CollabRunner:
             out = self._cloud_fn(x)
             jax.block_until_ready(out)
         t3 = time.perf_counter()
+        if self.channel.trace is not None:
+            self.channel.advance(self._analytic["T_S"] if
+                                 self.simulate_compute else t3 - t2)
         if self.simulate_compute:
             timing = RequestTiming(self._analytic["T_D"], t_tx,
                                    self._analytic["T_S"], tx_bytes)
@@ -206,7 +304,9 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 compact: bool = False, host: str = "127.0.0.1",
                 max_clients: Optional[int] = 1,
                 stop: Optional[threading.Event] = None,
-                plan_digest: Optional[str] = None) -> None:
+                plan_digest: Optional[str] = None,
+                resplit_candidates: Optional[Sequence[int]] = None,
+                trace: Optional[LinkTrace] = None) -> None:
     """Cloud-side loop: accept edge connections, answer frames.
 
     A threaded accept loop serves each connection in its own handler
@@ -226,12 +326,26 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     is answered with a reject status before the connection closes — the
     contract check behind ``repro.serving``. Edges that skip the HELLO
     (legacy clients) are served unchecked.
+
+    A RESPLIT control frame moves the connection's split point live: the
+    handler swaps its cloud sub-model (``SplitFnBank`` lookup — the bank
+    holds every candidate over the same deployed params) and acks, all on
+    the same connection. Split state is per-connection, so concurrent
+    edges can sit at different partitions. ``resplit_candidates``
+    restricts which splits are accepted (the plan's adaptive section);
+    ``None`` accepts any split valid for the deployed network.
+    ``trace`` makes the shaper's rate follow a time-varying link.
     """
-    _, cloud_fn, _, _ = build_split_fns(params, cfg, split, masks, compact)
+    bank = SplitFnBank(params, cfg, masks, compact)
+    if resplit_candidates:
+        # pre-jit every candidate pair so a live RESPLIT doesn't stall its
+        # first request on compilation (the edge blocks on recv meanwhile)
+        bank.warm(resplit_candidates, _warm_input(cfg))
 
     def _handle(conn: socket.socket, rec: Dict) -> None:
-        ch = ShapedSocket(conn, link) if link else None
+        ch = ShapedSocket(conn, link, trace=trace) if link or trace else None
         rx, tx = _frame_io(conn, ch)
+        _, cloud_fn, _ = bank.get(split)
         served = 0
         try:
             while max_requests is None or served < max_requests:
@@ -247,6 +361,18 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     if not ok:
                         return              # contract mismatch: fail fast
                     rec["claimed"] = True   # handshake is not a request
+                    continue
+                if is_resplit(buf):
+                    want, _, pver = decode_resplit(buf)
+                    ok = (pver == PROTOCOL_VERSION
+                          and 0 <= want <= bank.n_layers
+                          and (resplit_candidates is None
+                               or want in resplit_candidates))
+                    if ok:
+                        _, cloud_fn, _ = bank.get(want)
+                    out = encode_resplit(want, status=0 if ok else 1)
+                    tx(struct.pack("<Q", len(out)) + out)
+                    rec["claimed"] = True   # control frame, not a request
                     continue
                 arr, _ = decode_any(buf)
                 logits = np.asarray(cloud_fn(arr) if cloud_fn is not None
@@ -328,6 +454,11 @@ class EdgeClient:
         responses, so edge compute of request i+1 overlaps the network and
         cloud time of request i. Results come back in submission order.
     Do not interleave ``infer`` with outstanding ``submit``s.
+
+    ``resplit(split)`` moves the partition point on the live connection
+    (RESPLIT control frame + ack): the local edge sub-model and the cloud
+    peer's ``start_layer`` swap together without reconnecting — the hook
+    the adaptive split controller drives when the measured link drifts.
     """
 
     def __init__(self, params, cfg: CNNConfig, split: int, port: int,
@@ -335,12 +466,16 @@ class EdgeClient:
                  compact: bool = False, codec: Optional[str] = None,
                  pack: bool = False, host: str = "127.0.0.1",
                  timeout: float = 30.0,
-                 plan_digest: Optional[str] = None):
-        self.edge_fn, _, self._keep, _ = build_split_fns(
-            params, cfg, split, masks, compact, pack)
+                 plan_digest: Optional[str] = None,
+                 trace: Optional[LinkTrace] = None):
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+        self.edge_fn, _, self._keep = self._bank.get(split)
+        self.split = split
+        self.cfg = cfg
         self.codec = codec
         sock = socket.create_connection((host, port), timeout=timeout)
-        self.ch = ShapedSocket(sock, link) if link else None
+        self.ch = (ShapedSocket(sock, link, trace=trace)
+                   if link or trace else None)
         self.sock = sock
         self._send_q: Optional[queue.Queue] = None
         self._out_q: Optional[queue.Queue] = None
@@ -379,16 +514,20 @@ class EdgeClient:
                 f"load the same DeploymentPlan (split/compact/codec/model)")
 
     # -- framing ------------------------------------------------------------
-    def _encode_frame(self, x: np.ndarray) -> bytes:
+    def _encode_payload(self, x: np.ndarray) -> bytes:
+        """Frame payload (excluding the 8-byte length prefix): the prefix
+        is transport framing, so reported ``tx_bytes`` stays comparable
+        with the in-process executors' payload accounting."""
         if self.codec is None and self._keep is None:
-            payload = encode_tensor(x)
-        else:
-            payload = encode_feature(x, codec=self.codec or "fp32",
-                                     keep=self._keep)
-        return struct.pack("<Q", len(payload)) + payload
+            return encode_tensor(x)
+        return encode_feature(x, codec=self.codec or "fp32",
+                              keep=self._keep)
 
     def _send(self, frame: bytes) -> None:
         (self.ch.sendall if self.ch else self.sock.sendall)(frame)
+
+    def _send_payload(self, payload: bytes) -> None:
+        self._send(struct.pack("<Q", len(payload)) + payload)
 
     def _recv_response(self) -> np.ndarray:
         rx, _ = _frame_io(self.sock, self.ch)
@@ -396,22 +535,61 @@ class EdgeClient:
         logits, _ = decode_tensor(rx(n))
         return logits
 
+    def warm(self, splits: Sequence[int]) -> None:
+        """Pre-jit the edge half of every candidate split (batch-1 shape)
+        so a live resplit doesn't stall its first request on compilation
+        (the cloud warms its own halves in ``serve_cloud``)."""
+        self._bank.warm(splits, _warm_input(self.cfg), edge_only=True)
+
+    # -- live split switch --------------------------------------------------
+    def resplit(self, split: int) -> None:
+        """Move the split point on the live connection.
+
+        Sends a RESPLIT control frame, requires the cloud's ack, then
+        swaps the local edge sub-model — the next ``infer`` already runs
+        at the new partition on the same socket. Must not be called with
+        outstanding async ``submit``s (the control frame would interleave
+        with in-flight tensor frames)."""
+        if self._outstanding != self._n_collected:
+            raise RuntimeError(
+                f"resplit with {self._outstanding - self._n_collected} "
+                f"outstanding pipelined request(s); collect() them first")
+        self._send_payload(encode_resplit(split))
+        rx, _ = _frame_io(self.sock, self.ch)
+        (n,) = struct.unpack("<Q", rx(8))
+        got, status, _ = decode_resplit(rx(n))
+        if status != 0 or got != split:
+            raise PlanMismatchError(
+                f"cloud rejected resplit to c={split} (not a candidate of "
+                f"its deployment plan, or outside the deployed network)")
+        self.edge_fn, _, self._keep = self._bank.get(split)
+        self.split = split
+
     # -- synchronous path ---------------------------------------------------
     def infer(self, image: np.ndarray) -> Dict:
+        """One request/response. ``t_tx`` is the uplink observation the
+        bandwidth estimator feeds on: the shaper's modeled cost of the
+        feature send when the socket is shaped (wall-clock is useless
+        there — the token bucket lets small frames burst through), the
+        send wall-clock on a raw socket. ``t_net_and_cloud`` additionally
+        includes the cloud compute and the logits downlink."""
         t0 = time.perf_counter()
         x = jnp.asarray(image)
         if self.edge_fn is not None:
             x = self.edge_fn(x)
             jax.block_until_ready(x)
         t1 = time.perf_counter()
-        frame = self._encode_frame(np.asarray(x))
-        self._send(frame)
+        payload = self._encode_payload(np.asarray(x))
+        self._send_payload(payload)
+        t_sent = time.perf_counter()
         logits = self._recv_response()
         t2 = time.perf_counter()
         return {"logits": logits,
                 "t_edge": t1 - t0,
                 "t_net_and_cloud": t2 - t1,
-                "tx_bytes": len(frame)}
+                "t_tx": (self.ch.last_send_cost_s if self.ch is not None
+                         else t_sent - t1),
+                "tx_bytes": len(payload)}
 
     # -- pipelined (async) path ---------------------------------------------
     def _sender_loop(self) -> None:
@@ -430,9 +608,9 @@ class EdgeClient:
                     x = self.edge_fn(x)
                     jax.block_until_ready(x)
                 t_edge = time.perf_counter() - t0
-                frame = self._encode_frame(np.asarray(x))
-                self._send(frame)
-                self._inflight.put((rid, t_edge, len(frame)))
+                payload = self._encode_payload(np.asarray(x))
+                self._send_payload(payload)
+                self._inflight.put((rid, t_edge, len(payload)))
             except Exception as e:                      # noqa: BLE001
                 self._inflight.put((rid, e, 0))
 

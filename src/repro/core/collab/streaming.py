@@ -84,11 +84,13 @@ class StreamingCollabRunner:
                  profile: TwoTierProfile, masks=None,
                  compact: bool = False, codec: Optional[str] = None,
                  pack: bool = False, queue_depth: int = 4,
-                 microbatch: int = 1, realtime_channel: bool = True):
+                 microbatch: int = 1, realtime_channel: bool = True,
+                 trace=None):
         self.split = split
         self.microbatch = max(1, microbatch)
         self.queue_depth = max(1, queue_depth)
-        self.channel = SimChannel(profile.link, realtime=realtime_channel)
+        self.channel = SimChannel(profile.link, realtime=realtime_channel,
+                                  trace=trace)
         self.codec = codec
         (self._edge_fn, self._cloud_fn, self._keep,
          self.deploy_cfg) = build_split_fns(params, cfg, split, masks,

@@ -199,6 +199,44 @@ def cnn_layer_output_bytes(params, cfg: CNNConfig, x, masks=None) -> List[int]:
 
 
 # ---------------------------------------------------------------------------
+# the true wire payload at a split (codec x packing semantics of tx_scale)
+# ---------------------------------------------------------------------------
+def wire_tx_scale(cfg: CNNConfig, masks, split: int,
+                  codec: Optional[str] = None, pack: bool = False,
+                  compact: bool = False) -> float:
+    """The ``tx_scale`` that makes the analytic ``tx_bytes`` equal the
+    actual wire payload of the deployed runtime at ``split``.
+
+    ``tx_scale`` is the product of two independent discounts:
+
+      * **codec** — bytes per element relative to fp32 (1.0 / 0.5 / 0.25
+        for fp32 / fp16 / int8, ``protocol.CODEC_TX_SCALE``);
+      * **packing** — which elements ship at all. The masked layer costs
+        (``cnn_layer_costs(cfg, masks)``) already price ``out_bytes`` at
+        the surviving-channel fraction, which is the honest wire size only
+        for ``pack=True`` (bitmask packing strips the dead channels) or
+        ``compact=True`` (they are physically gone). A masked-but-dense
+        deployment *without* packing ships the full tensor, zeros
+        included, so this helper *un*-discounts by the keep ratio at the
+        split boundary to match what actually crosses the link.
+
+    Frame headers (a few tens of bytes) are not modelled.
+    """
+    from repro.core.collab.protocol import CODEC_TX_SCALE
+    from repro.models.cnn import split_keep_indices
+    scale = CODEC_TX_SCALE[codec or "fp32"]
+    if compact or not masks or split <= 0:
+        return scale
+    keep = split_keep_indices(cfg, masks, split)
+    if keep is None or pack:
+        # all channels live, or the dead ones don't cross the wire: the
+        # keep-discounted out_bytes already is the wire payload
+        return scale
+    n_full = layer_shapes(cfg)[split - 1][0]
+    return scale * n_full / keep.size
+
+
+# ---------------------------------------------------------------------------
 # Eq. 5: the latency of a split
 # ---------------------------------------------------------------------------
 def split_latency(costs: Sequence[LayerCost], c: int,
@@ -206,14 +244,26 @@ def split_latency(costs: Sequence[LayerCost], c: int,
                   input_bytes: float,
                   measured_device_s: Optional[Sequence[float]] = None,
                   measured_server_s: Optional[Sequence[float]] = None,
-                  tx_scale: float = 1.0
+                  tx_scale: float = 1.0,
+                  round_trip: bool = False
                   ) -> Dict[str, float]:
     """Latency breakdown for split point c (layers [0,c) on device).
 
     ``tx_scale`` discounts the bytes that actually cross the link relative
-    to the fp32 activation (feature codec: 0.5 for fp16, 0.25 for int8 —
-    see ``repro.core.collab.protocol.CODEC_TX_SCALE``); compute-side memory
-    traffic is unaffected."""
+    to the masked/compacted fp32 activation the costs were priced at. It
+    composes the feature codec (0.5 for fp16, 0.25 for int8 — see
+    ``repro.core.collab.protocol.CODEC_TX_SCALE``) with the channel-packing
+    correction; use ``wire_tx_scale`` to derive the combined factor for a
+    concrete deployment. Compute-side memory traffic is unaffected.
+
+    **T_TX is uplink-only by default**: it charges the feature tensor
+    (device -> server) plus ONE RTT, matching the paper's Eq. 5 and every
+    comparison table in ``benchmarks/``. The socket path is actually
+    request/response — logits come back — so ``round_trip=True`` adds the
+    return payload (the final layer's output bytes) and a second RTT for
+    deployments where the downlink is not negligible. ``tx_bytes`` in the
+    returned row stays uplink-only either way (it is what the runtimes
+    report as transmitted feature bytes)."""
     n = len(costs)
     assert 0 <= c <= n
 
@@ -234,5 +284,9 @@ def split_latency(costs: Sequence[LayerCost], c: int,
         t_tx = 0.0
     else:
         t_tx = tx_bytes / profile.link.bandwidth + profile.link.rtt_s
+        if round_trip:
+            # logits downlink: final layer output + its own RTT
+            t_tx += (costs[n - 1].out_bytes / profile.link.bandwidth
+                     + profile.link.rtt_s)
     return {"T_D": t_d, "T_TX": t_tx, "T_S": t_s,
             "T": t_d + t_tx + t_s, "tx_bytes": 0.0 if c == n else tx_bytes}

@@ -9,10 +9,19 @@ digit fraction of its 35.6 TFLOP/s peak because AlexNet layers are tiny.
 Tier B (TPU-native): v5e chips; the "wireless" hop becomes the inter-pod ICI
 link (DESIGN.md §2). Constants per the assignment: 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Time-varying links: a ``LinkProfile`` is a point-in-time snapshot; a
+``LinkTrace`` is a piecewise-constant schedule of (bandwidth, RTT) over
+elapsed time — the wireless reality the paper's title promises, where the
+split picked at deployment time stops being optimal mid-run. The collab
+channels (``SimChannel``/``ShapedSocket``) replay a trace per transmitted
+byte, and ``repro.core.collab.adaptive`` re-plans the split against the
+bandwidth the trace actually delivers. Canned traces live in ``TRACES``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -28,6 +37,91 @@ class LinkProfile:
     name: str
     bandwidth: float            # bytes/s
     rtt_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class TraceSegment:
+    """One piecewise-constant stretch of a time-varying link."""
+    duration_s: float           # use float("inf") for a terminal segment
+    bandwidth: float            # bytes/s while this segment is active
+    rtt_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class LinkTrace:
+    """Piecewise-constant (bandwidth, RTT) schedule over elapsed time.
+
+    ``state_at(t)`` answers "what does the link look like ``t`` seconds
+    into the deployment"; ``loop=True`` repeats the schedule forever
+    (periodic congestion), otherwise the last segment holds after the
+    schedule runs out. ``span_at(t)`` additionally reports how long the
+    current segment still lasts, which lets ``SimChannel`` charge a
+    transmission that straddles a bandwidth change exactly, segment by
+    segment.
+    """
+    name: str
+    segments: Tuple[TraceSegment, ...]
+    loop: bool = False
+
+    def __post_init__(self) -> None:
+        if not self.segments:
+            raise ValueError("LinkTrace needs at least one segment")
+        if self.loop and not all(s.duration_s < float("inf")
+                                 for s in self.segments):
+            raise ValueError("a looping trace cannot contain an infinite "
+                             "segment")
+        for s in self.segments:
+            # a dead link would make byte-draining loops spin forever;
+            # model an outage as a very small positive bandwidth instead
+            if not (s.bandwidth > 0 and s.duration_s > 0):
+                raise ValueError("trace segments need bandwidth > 0 and "
+                                 "duration > 0 (model an outage as e.g. "
+                                 "1 kbit/s, not 0)")
+
+    @property
+    def duration_s(self) -> float:
+        return sum(s.duration_s for s in self.segments)
+
+    def span_at(self, t: float) -> Tuple[float, float, float]:
+        """(bandwidth, rtt_s, seconds until this segment ends) at time t.
+
+        The remaining span is ``inf`` once a non-looping trace has settled
+        into its final segment.
+        """
+        t = max(0.0, t)
+        total = self.duration_s
+        if self.loop:
+            t = t % total
+        elif t >= total:
+            last = self.segments[-1]
+            return last.bandwidth, last.rtt_s, float("inf")
+        for seg in self.segments:
+            if t < seg.duration_s:
+                return seg.bandwidth, seg.rtt_s, seg.duration_s - t
+            t -= seg.duration_s
+        last = self.segments[-1]          # t == total on a non-loop trace
+        return last.bandwidth, last.rtt_s, float("inf")
+
+    def state_at(self, t: float) -> Tuple[float, float]:
+        """(bandwidth bytes/s, rtt_s) in effect ``t`` seconds in."""
+        bw, rtt, _ = self.span_at(t)
+        return bw, rtt
+
+    def link_at(self, t: float) -> LinkProfile:
+        bw, rtt = self.state_at(t)
+        return LinkProfile(f"{self.name}@{t:.2f}s", bandwidth=bw, rtt_s=rtt)
+
+    @classmethod
+    def from_mbps(cls, name: str, spans, rtt_ms: float = 2.0,
+                  loop: bool = False) -> "LinkTrace":
+        """Build from (duration_s, mbps) or (duration_s, mbps, rtt_ms)
+        tuples — the natural units wireless people speak."""
+        segs = []
+        for span in spans:
+            dur, mbps = span[0], span[1]
+            rtt = span[2] if len(span) > 2 else rtt_ms
+            segs.append(TraceSegment(dur, mbps * 1e6 / 8, rtt * 1e-3))
+        return cls(name, tuple(segs), loop=loop)
 
 
 @dataclass(frozen=True)
@@ -66,4 +160,27 @@ PROFILES = {
     "paper": PAPER_PROFILE,
     "tpu_two_pod": TPU_TWO_POD,
     "tpu_edge_cloud": TPU_EDGE_CLOUD,
+}
+
+# --- canned time-varying link traces ----------------------------------------
+#: the paper's steady testbed link, as a (degenerate) trace
+WIFI_STEADY = LinkTrace.from_mbps("wifi_steady",
+                                  [(float("inf"), 50.0)], rtt_ms=4.0)
+#: edge device walks away from the access point: 50 -> 18 -> 5 Mbps
+WIFI_DEGRADING = LinkTrace.from_mbps(
+    "wifi_degrading", [(4.0, 50.0), (4.0, 18.0), (float("inf"), 5.0)],
+    rtt_ms=4.0)
+#: 4G field link with a coverage hole mid-route (handover dip)
+LTE_HANDOVER = LinkTrace.from_mbps(
+    "lte_handover",
+    [(3.0, 30.0, 30.0), (2.0, 2.0, 80.0), (float("inf"), 25.0, 30.0)])
+#: shared uplink that sawtooths between free and congested, forever
+CONGESTED_SAWTOOTH = LinkTrace.from_mbps(
+    "congested_sawtooth", [(2.0, 40.0), (2.0, 6.0)], rtt_ms=10.0, loop=True)
+
+TRACES = {
+    "wifi_steady": WIFI_STEADY,
+    "wifi_degrading": WIFI_DEGRADING,
+    "lte_handover": LTE_HANDOVER,
+    "congested_sawtooth": CONGESTED_SAWTOOTH,
 }

@@ -14,7 +14,7 @@ two-stage decomposition.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.partition.latency_model import LayerCost, split_latency
 from repro.core.partition.profiles import TwoTierProfile
@@ -32,15 +32,20 @@ def sweep_splits(costs: Sequence[LayerCost], profile: TwoTierProfile,
                  measured_device_s: Optional[Sequence[float]] = None,
                  measured_server_s: Optional[Sequence[float]] = None,
                  candidates: Optional[Sequence[int]] = None,
-                 tx_scale: float = 1.0
+                 tx_scale: Union[float, Callable[[int], float]] = 1.0,
+                 round_trip: bool = False
                  ) -> List[Dict[str, float]]:
+    """Eq. 5 at every candidate split. ``tx_scale`` may be a callable
+    ``split -> scale`` because the channel-packing discount depends on
+    which channels survive at each boundary (``wire_tx_scale``)."""
     n = len(costs)
     cands = list(candidates) if candidates is not None else list(range(n + 1))
     table = []
     for c in cands:
+        scale = tx_scale(c) if callable(tx_scale) else tx_scale
         row = split_latency(costs, c, profile, input_bytes,
                             measured_device_s, measured_server_s,
-                            tx_scale=tx_scale)
+                            tx_scale=scale, round_trip=round_trip)
         row["split"] = c
         table.append(row)
     return table

@@ -20,7 +20,11 @@ EdgeClient/serve_cloud with the HELLO digest handshake), ``streaming``
 (3-stage pipelined runtime). All take the full deployment contract from
 the plan and return the same result shape.
 """
+from repro.core.collab.adaptive import (AdaptivePolicy,
+                                        AdaptiveSplitController,
+                                        BandwidthEstimator, SplitSwitch)
 from repro.core.collab.protocol import PlanMismatchError
+from repro.core.partition.profiles import TRACES, LinkTrace, TraceSegment
 from repro.serving.plan import PLAN_VERSION, DeploymentPlan
 from repro.serving.session import (BACKENDS, CloudServer, InferenceSession,
                                    LocalSession, SocketSession,
@@ -30,4 +34,6 @@ __all__ = [
     "BACKENDS", "PLAN_VERSION", "DeploymentPlan", "InferenceSession",
     "LocalSession", "SocketSession", "StreamingSession", "CloudServer",
     "PlanMismatchError", "connect", "serve",
+    "AdaptivePolicy", "AdaptiveSplitController", "BandwidthEstimator",
+    "SplitSwitch", "LinkTrace", "TraceSegment", "TRACES",
 ]

@@ -15,11 +15,27 @@ positional knobs smeared across constructors:
     .npz, and the contract as ``plan.json`` — so a plan exported once can
     be deployed anywhere with no access to the original pipeline objects;
   * ``plan.digest`` is a stable hash of the *contract* (architecture,
-    split, masks, compact, codec, pack, version): the HELLO handshake
-    compares the two peers' digests on connect and rejects a mismatch
-    before any feature tensor is exchanged. Weights are deliberately not
-    part of the digest — a weight mismatch yields wrong predictions, not
-    undecodable tensors; the digest guards the frame/shape contract.
+    split, masks, compact, codec, pack, version, adaptive section): the
+    HELLO handshake compares the two peers' digests on connect and
+    rejects a mismatch before any feature tensor is exchanged. Weights
+    are deliberately not part of the digest — a weight mismatch yields
+    wrong predictions, not undecodable tensors; the digest guards the
+    frame/shape contract.
+
+**Adaptive plans**: setting ``adaptive=AdaptivePolicy(candidates=...)``
+declares the deployment *re-plannable* — both peers pre-arm jitted
+sub-models for every candidate split (``SplitFnBank``), the session
+estimates the live uplink bandwidth from each request's
+``tx_bytes``/``t_tx``, re-runs the Eq. 5 greedy sweep on the measured
+link, and switches the split through the RESPLIT control frame without
+reconnecting (hysteresis + dwell guard against flapping; see
+``repro.core.collab.adaptive``). The adaptive section is folded into the
+digest — the candidate set is part of the contract, since the cloud must
+be willing to serve any split the edge may announce. Plans without an
+``adaptive`` section keep their pre-adaptive digests. Time-varying link
+*traces* (``repro.core.partition.profiles.LinkTrace``) are an
+environment/simulation knob, not part of the contract: pass them to the
+session/server (``connect(plan, trace=...)``), not the plan.
 
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
@@ -37,10 +53,12 @@ import numpy as np
 
 from repro.checkpoint import store
 from repro.configs.base import CNNConfig, ConvLayerSpec
+from repro.core.collab.adaptive import AdaptivePolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
-                                                compacted_cnn_layer_costs)
+                                                compacted_cnn_layer_costs,
+                                                wire_tx_scale)
 from repro.core.partition.profiles import (ComputeProfile, LinkProfile,
                                            PAPER_PROFILE, TwoTierProfile)
 from repro.core.partition.splitter import greedy_split
@@ -97,6 +115,7 @@ class DeploymentPlan:
     port: int = 29500
     connect_timeout_s: float = 30.0
     shape_link: bool = True
+    adaptive: Optional[AdaptivePolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -112,6 +131,17 @@ class DeploymentPlan:
         if self.masks is not None:
             self.masks = {int(i): np.asarray(m) for i, m in
                           sorted(self.masks.items())}
+        if self.adaptive is not None:
+            cands = sorted({int(c) for c in self.adaptive.candidates}
+                           | {self.split})
+            bad = [c for c in cands if not 0 <= c <= n]
+            if bad:
+                raise ValueError(f"adaptive candidates {bad} outside "
+                                 f"[0, {n}]")
+            # normalized: sorted, unique, always containing the initial
+            # split (so the controller's current point stays sweepable)
+            self.adaptive = dataclasses.replace(self.adaptive,
+                                                candidates=tuple(cands))
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -122,13 +152,19 @@ class DeploymentPlan:
                   **transport) -> "DeploymentPlan":
         """Build a plan from explicit pieces. ``split=None`` runs the
         greedy split sweep (Algorithm 1) on the deployed shapes —
-        compacted when ``compact``, masked otherwise — with the codec's
-        wire discount priced in."""
+        compacted when ``compact``, masked otherwise — with the true wire
+        cost per candidate priced in (``wire_tx_scale``: codec bytes per
+        element x channel packing, the same model the runtimes and the
+        adaptive controller use)."""
         if split is None:
+            deploy_compact = compact and bool(masks)
             costs = (compacted_cnn_layer_costs(cfg, masks)
-                     if compact and masks else cnn_layer_costs(cfg, masks))
-            split = greedy_split(costs, profile, cnn_input_bytes(cfg),
-                                 tx_scale=CODEC_TX_SCALE[codec]).split_point
+                     if deploy_compact else cnn_layer_costs(cfg, masks))
+            split = greedy_split(
+                costs, profile, cnn_input_bytes(cfg),
+                tx_scale=lambda c: wire_tx_scale(
+                    cfg, masks, c, codec=codec, pack=pack,
+                    compact=deploy_compact)).split_point
         return cls(cfg=cfg, params=params, split=int(split), masks=masks,
                    compact=compact, codec=codec, pack=pack, profile=profile,
                    **transport)
@@ -152,15 +188,23 @@ class DeploymentPlan:
 
     # -- contract digest ----------------------------------------------------
     def contract(self) -> Dict[str, Any]:
-        """What both peers must agree on for frames to decode correctly."""
+        """What both peers must agree on for frames to decode correctly.
+
+        The adaptive section is part of the contract (the cloud must be
+        willing to serve any candidate split the edge may RESPLIT to),
+        but the key is only present when set, so pre-adaptive plans keep
+        their digests."""
         masks = None
         if self.masks:
             masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
                      for i, m in self.masks.items()}
-        return {"version": self.version, "cfg": _cfg_to_json(self.cfg),
-                "split": self.split, "masks": masks,
-                "compact": self.compact, "codec": self.codec,
-                "pack": self.pack}
+        doc = {"version": self.version, "cfg": _cfg_to_json(self.cfg),
+               "split": self.split, "masks": masks,
+               "compact": self.compact, "codec": self.codec,
+               "pack": self.pack}
+        if self.adaptive is not None:
+            doc["adaptive"] = self.adaptive.to_json()
+        return doc
 
     @property
     def digest(self) -> str:
@@ -186,6 +230,8 @@ class DeploymentPlan:
                "link": {"host": self.host, "port": self.port,
                         "connect_timeout_s": self.connect_timeout_s,
                         "shape_link": self.shape_link},
+               "adaptive": (self.adaptive.to_json()
+                            if self.adaptive else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -206,13 +252,16 @@ class DeploymentPlan:
             with np.load(os.path.join(path, "masks.npz")) as data:
                 masks = {int(k): data[k] for k in data.files}
         link = doc["link"]
+        adaptive = (AdaptivePolicy.from_json(doc["adaptive"])
+                    if doc.get("adaptive") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
                    profile=_profile_from_json(doc["profile"]),
                    host=link["host"], port=link["port"],
                    connect_timeout_s=link["connect_timeout_s"],
-                   shape_link=link["shape_link"], version=doc["version"])
+                   shape_link=link["shape_link"], adaptive=adaptive,
+                   version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -225,9 +274,11 @@ class DeploymentPlan:
         n = len(self.cfg.layers)
         prune = (f"{len(self.masks)} masked layers" if self.masks
                  else "dense")
+        adapt = (f", adaptive over {list(self.adaptive.candidates)}"
+                 if self.adaptive else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name})")
+                f"({self.profile.link.name}){adapt}")

@@ -21,7 +21,19 @@ Every backend returns the same result shape from ``infer`` /
 
 where ``t_upstream`` is everything past the edge (network + cloud) and a
 ``None`` marks a quantity the backend cannot attribute per request (e.g.
-per-request wall time inside the pipelined backends).
+per-request wall time inside the pipelined backends). ``tx_bytes`` is the
+transmitted frame *payload* — identical across backends for the same plan
+(the socket path's 8-byte length prefix is framing, not payload).
+
+**Adaptive plans** (``plan.adaptive`` set): the ``local`` and ``socket``
+sessions close the control loop per request — each ``infer`` feeds its
+uplink observation to an ``AdaptiveSplitController``, and when the
+measured link has drifted past the hysteresis margin the session switches
+the split in place (``CollabRunner.set_split`` locally; the RESPLIT
+control frame on the live socket). ``session.split`` is the current
+partition and ``session.switches`` the decision log. Pass a ``LinkTrace``
+via ``connect(plan, trace=...)`` (and ``serve(plan, trace=...)``) to
+replay a time-varying link.
 """
 from __future__ import annotations
 
@@ -30,13 +42,24 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.collab.adaptive import (AdaptiveSplitController,
+                                        SplitSwitch)
 from repro.core.collab.protocol import PlanMismatchError  # re-export  # noqa: F401
 from repro.core.collab.runtime import (CollabRunner, EdgeClient,
                                        serve_cloud)
 from repro.core.collab.streaming import StreamingCollabRunner, StreamReport
+from repro.core.partition.profiles import LinkTrace
 from repro.serving.plan import DeploymentPlan
 
 BACKENDS = ("local", "socket", "streaming")
+
+
+def _controller_for(plan: DeploymentPlan) -> Optional[AdaptiveSplitController]:
+    if plan.adaptive is None:
+        return None
+    return AdaptiveSplitController.for_deployment(
+        plan.cfg, plan.adaptive, plan.split, plan.profile, masks=plan.masks,
+        compact=plan.compact, codec=plan.codec, pack=plan.pack)
 
 
 def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
@@ -49,12 +72,19 @@ def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
 
 
 class InferenceSession:
-    """Base session: one deployed plan, uniform request interface."""
+    """Base session: one deployed plan, uniform request interface.
+
+    ``split`` is the *current* partition point (it moves under an
+    adaptive plan); ``switches`` logs every ``SplitSwitch`` the adaptive
+    controller executed on this session.
+    """
 
     backend: str = "?"
 
     def __init__(self, plan: DeploymentPlan):
         self.plan = plan
+        self.split: int = plan.split
+        self.switches: List[SplitSwitch] = []
 
     def infer(self, image: np.ndarray) -> Dict:
         raise NotImplementedError
@@ -77,23 +107,36 @@ class LocalSession(InferenceSession):
     """In-process split executor. ``t_edge``/``t_upstream`` come from the
     analytic hardware profile when ``simulate_compute`` (the default —
     this container is not an i7/3090 pair); the channel term is always
-    charged per transmitted byte."""
+    charged per transmitted byte. A ``trace`` replays a time-varying
+    link on the simulated channel; with an adaptive plan the session
+    re-splits itself as the charged per-send costs reveal the drift."""
 
     backend = "local"
 
     def __init__(self, plan: DeploymentPlan, *,
                  realtime_channel: bool = False,
-                 simulate_compute: bool = True):
+                 simulate_compute: bool = True,
+                 trace: Optional[LinkTrace] = None):
         super().__init__(plan)
         self._runner = CollabRunner(
             plan.params, plan.cfg, plan.split, plan.profile,
             masks=plan.masks, realtime_channel=realtime_channel,
             simulate_compute=simulate_compute, compact=plan.compact,
-            codec=plan.codec, pack=plan.pack)
+            codec=plan.codec, pack=plan.pack, trace=trace)
+        self._controller = _controller_for(plan)
+        if self._controller is not None:
+            # pre-jit every candidate so a switch doesn't stall a request
+            self._runner.warm(plan.adaptive.candidates)
 
     def infer(self, image: np.ndarray) -> Dict:
         res = self._runner.infer(image)
         t = res["timing"]
+        if self._controller is not None:
+            sw = self._controller.step(t.tx_bytes, t.t_tx)
+            if sw is not None:
+                self._runner.set_split(sw.new_split)
+                self.split = sw.new_split
+                self.switches.append(sw)
         return _result(res["logits"], t.t_device, t.t_tx + t.t_server,
                        t.tx_bytes)
 
@@ -101,12 +144,20 @@ class LocalSession(InferenceSession):
 class SocketSession(InferenceSession):
     """Edge side of the real-socket deployment. Requires a cloud peer
     (``serve``/``CloudServer``) listening at the plan's link endpoint;
-    ``verify=True`` (default) runs the HELLO digest handshake."""
+    ``verify=True`` (default) runs the HELLO digest handshake.
+
+    With an adaptive plan, each synchronous ``infer`` feeds the measured
+    send wall-clock to the controller and executes any decided switch via
+    the RESPLIT frame — same connection, no re-handshake. ``resplit``
+    forces a switch manually. A ``trace`` shapes the edge's uplink
+    against a time-varying link (pair it with ``serve(plan, trace=...)``
+    for the downlink)."""
 
     backend = "socket"
 
     def __init__(self, plan: DeploymentPlan, *, verify: bool = True,
-                 host: Optional[str] = None, port: Optional[int] = None):
+                 host: Optional[str] = None, port: Optional[int] = None,
+                 trace: Optional[LinkTrace] = None):
         super().__init__(plan)
         self._client = EdgeClient(
             plan.params, plan.cfg, plan.split, port or plan.port,
@@ -114,16 +165,44 @@ class SocketSession(InferenceSession):
             link=plan.profile.link if plan.shape_link else None,
             compact=plan.compact, codec=plan.codec, pack=plan.pack,
             host=host or plan.host, timeout=plan.connect_timeout_s,
-            plan_digest=plan.digest if verify else None)
+            plan_digest=plan.digest if verify else None, trace=trace)
+        self._controller = _controller_for(plan)
+        if self._controller is not None:
+            # pre-jit the edge half of every candidate (the cloud peer
+            # warms its own halves when it arms RESPLIT)
+            self._client.warm(plan.adaptive.candidates)
+
+    def resplit(self, split: int) -> None:
+        """Move the partition on the live connection (RESPLIT + ack).
+        With an adaptive plan the controller adopts the override and its
+        dwell window restarts (it won't overrule it on the next infer)."""
+        self._client.resplit(split)
+        self.split = split
+        if self._controller is not None:
+            self._controller.note_external_switch(split)
 
     def infer(self, image: np.ndarray) -> Dict:
         res = self._client.infer(image)
+        if self._controller is not None:
+            sw = self._controller.step(res["tx_bytes"], res["t_tx"])
+            if sw is not None:
+                self._client.resplit(sw.new_split)
+                self.split = sw.new_split
+                self.switches.append(sw)
         return _result(res["logits"], res["t_edge"],
                        res["t_net_and_cloud"], res["tx_bytes"])
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         """Pipelined submit/collect: edge compute of request i+1 overlaps
-        network + cloud time of request i. Results in submission order."""
+        network + cloud time of request i. Results in submission order.
+
+        With an adaptive plan this falls back to the sequential per-request
+        loop: the control loop needs a per-request uplink observation and a
+        quiesced connection to switch on, neither of which the async
+        pipeline provides (a RESPLIT cannot interleave with in-flight
+        frames)."""
+        if self._controller is not None:
+            return [self.infer(img) for img in images]
         for img in images:
             self._client.submit(img)
         out = self._client.collect(len(images))
@@ -142,13 +221,14 @@ class StreamingSession(InferenceSession):
     backend = "streaming"
 
     def __init__(self, plan: DeploymentPlan, *, queue_depth: int = 4,
-                 microbatch: int = 1, realtime_channel: bool = True):
+                 microbatch: int = 1, realtime_channel: bool = True,
+                 trace: Optional[LinkTrace] = None):
         super().__init__(plan)
         self._runner = StreamingCollabRunner(
             plan.params, plan.cfg, plan.split, plan.profile,
             masks=plan.masks, compact=plan.compact, codec=plan.codec,
             pack=plan.pack, queue_depth=queue_depth, microbatch=microbatch,
-            realtime_channel=realtime_channel)
+            realtime_channel=realtime_channel, trace=trace)
         self.last_report: Optional[StreamReport] = None
 
     def infer(self, image: np.ndarray) -> Dict:
@@ -181,17 +261,24 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
           max_clients: Optional[int] = 1,
           ready: Optional[threading.Event] = None,
           stop: Optional[threading.Event] = None,
-          verify: bool = True) -> None:
+          verify: bool = True,
+          trace: Optional[LinkTrace] = None) -> None:
     """Cloud-side entry point: serve ``plan`` on its link endpoint
     (blocking). ``max_clients=None`` + a ``stop`` event serves many edges
-    until told to quit; ``verify`` arms the HELLO digest check."""
+    until told to quit; ``verify`` arms the HELLO digest check. An
+    adaptive plan arms the RESPLIT path, restricted to the plan's
+    candidate splits; a non-adaptive plan still answers RESPLIT for any
+    split valid on the deployed network (manual ``resplit``)."""
     serve_cloud(plan.params, plan.cfg, plan.split, port or plan.port,
                 masks=plan.masks,
                 link=plan.profile.link if plan.shape_link else None,
                 max_requests=max_requests, ready=ready,
                 compact=plan.compact, host=host or plan.host,
                 max_clients=max_clients, stop=stop,
-                plan_digest=plan.digest if verify else None)
+                plan_digest=plan.digest if verify else None,
+                resplit_candidates=(plan.adaptive.candidates
+                                    if plan.adaptive else None),
+                trace=trace)
 
 
 class CloudServer:
@@ -205,7 +292,8 @@ class CloudServer:
                  port: Optional[int] = None, host: Optional[str] = None,
                  max_requests: Optional[int] = None,
                  max_clients: Optional[int] = None, verify: bool = True,
-                 start_timeout: float = 10.0):
+                 start_timeout: float = 10.0,
+                 trace: Optional[LinkTrace] = None):
         self.plan = plan
         self._stop = threading.Event()
         ready = threading.Event()
@@ -213,7 +301,7 @@ class CloudServer:
             target=serve, args=(plan,),
             kwargs=dict(port=port, host=host, max_requests=max_requests,
                         max_clients=max_clients, ready=ready,
-                        stop=self._stop, verify=verify),
+                        stop=self._stop, verify=verify, trace=trace),
             daemon=True)
         self._thread.start()
         if not ready.wait(start_timeout):

@@ -1,0 +1,343 @@
+"""Adaptive split control: time-varying link traces, the trace-driven
+channels, the EWMA bandwidth estimator + hysteresis controller, the
+RESPLIT live-switch protocol, and the adaptive serving sessions."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import serving
+from repro.core.collab.adaptive import (AdaptivePolicy,
+                                        AdaptiveSplitController,
+                                        BandwidthEstimator)
+from repro.core.collab.channel import SimChannel
+from repro.core.collab.protocol import (PROTOCOL_VERSION, decode_resplit,
+                                        encode_resplit, is_hello,
+                                        is_resplit)
+from repro.core.collab.runtime import CollabRunner, SplitFnBank
+from repro.core.partition.profiles import (ComputeProfile, LinkProfile,
+                                           LinkTrace, PAPER_PROFILE,
+                                           TRACES, TraceSegment,
+                                           TwoTierProfile)
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import (cnn_apply, init_cnn_params, prunable_layers,
+                              tiny_cnn_config)
+
+#: an edge so weak that the greedy optimum genuinely moves with bandwidth
+#: (on the paper's i7 the 32px tiny CNN is device-dominant at any rate)
+MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
+                          mem_bw=0.5e9, overhead_s=3e-4)
+
+
+@pytest.fixture(scope="module")
+def pruned_setup():
+    cfg = tiny_cnn_config(num_classes=7, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(
+        params, cfg, {i: 0.5 for i in prunable_layers(cfg)})
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3)),
+                   np.float32)
+    return cfg, params, masks, x
+
+
+def mcu_profile(mbps: float, rtt_s: float = 1e-3) -> TwoTierProfile:
+    return TwoTierProfile(MCU_EDGE, PAPER_PROFILE.server,
+                          LinkProfile("test", bandwidth=mbps * 1e6 / 8,
+                                      rtt_s=rtt_s))
+
+
+# ---------------------------------------------------------------------------
+# link traces
+# ---------------------------------------------------------------------------
+def test_link_trace_piecewise_lookup():
+    tr = LinkTrace.from_mbps("t", [(1.0, 80.0), (2.0, 8.0),
+                                   (float("inf"), 2.0)], rtt_ms=5.0)
+    assert tr.state_at(0.0) == (80e6 / 8, 5e-3)
+    assert tr.state_at(0.999) == (80e6 / 8, 5e-3)
+    assert tr.state_at(1.0) == (8e6 / 8, 5e-3)
+    assert tr.state_at(2.999)[0] == 8e6 / 8
+    assert tr.state_at(100.0)[0] == 2e6 / 8
+    bw, _, span = tr.span_at(0.25)
+    assert bw == 80e6 / 8 and span == pytest.approx(0.75)
+    assert tr.span_at(10.0)[2] == float("inf")     # settled terminal segment
+
+
+def test_link_trace_loop_wraps_and_rejects_inf():
+    tr = LinkTrace.from_mbps("saw", [(1.0, 40.0), (1.0, 4.0)], loop=True)
+    assert tr.state_at(0.5)[0] == 40e6 / 8
+    assert tr.state_at(1.5)[0] == 4e6 / 8
+    assert tr.state_at(2.5)[0] == 40e6 / 8         # wrapped around
+    with pytest.raises(ValueError, match="loop"):
+        LinkTrace.from_mbps("bad", [(float("inf"), 1.0)], loop=True)
+    with pytest.raises(ValueError, match="bandwidth"):
+        LinkTrace.from_mbps("dead", [(1.0, 50.0), (float("inf"), 0.0)])
+    assert set(TRACES) == {"wifi_steady", "wifi_degrading", "lte_handover",
+                           "congested_sawtooth"}
+
+
+def test_sim_channel_charges_trace_segments_exactly():
+    # 1 MB/s for 1 s, then 0.1 MB/s: a 1.5 MB send drains 1 MB from the
+    # fast segment and 0.5 MB from the slow one
+    tr = LinkTrace("t", (TraceSegment(1.0, 1e6, 0.0),
+                         TraceSegment(float("inf"), 1e5, 0.0)))
+    ch = SimChannel(LinkProfile("unused", bandwidth=1.0), trace=tr)
+    t = ch.send(1_500_000)
+    assert t == pytest.approx(1.0 + 0.5e6 / 1e5)
+    assert ch.elapsed_s == pytest.approx(t)
+    # the next send starts in the slow segment
+    assert ch.send(100_000) == pytest.approx(1.0)
+
+
+def test_sim_channel_advance_moves_the_clock_without_bytes():
+    tr = LinkTrace.from_mbps("t", [(1.0, 80.0), (float("inf"), 8.0)],
+                             rtt_ms=0.0)
+    ch = SimChannel(LinkProfile("unused", bandwidth=1.0), trace=tr)
+    fast = ch.send(100_000)
+    ch.advance(2.0)                       # compute time: link degrades
+    slow = ch.send(100_000)
+    assert slow == pytest.approx(10 * fast)
+    assert ch.sent_bytes == 200_000
+
+
+# ---------------------------------------------------------------------------
+# estimator + controller
+# ---------------------------------------------------------------------------
+def test_bandwidth_estimator_ewma_and_rtt_subtraction():
+    est = BandwidthEstimator(alpha=0.5, min_samples=2, rtt_s=0.01)
+    assert est.bandwidth is None and not est.ready
+    est.observe(100_000, 0.11)            # 100 KB in 0.1 s net: 1 MB/s
+    assert est.bandwidth == pytest.approx(1e6)
+    assert not est.ready
+    est.observe(300_000, 0.16)            # 2 MB/s sample
+    assert est.ready
+    assert est.bandwidth == pytest.approx(1.5e6)   # EWMA midpoint
+    est.observe(0, 0.0)                   # edge-only request: no signal
+    assert est.bandwidth == pytest.approx(1.5e6)
+
+
+def test_controller_resweeps_and_guards_with_dwell(pruned_setup):
+    cfg, params, masks, _ = pruned_setup
+    policy = AdaptivePolicy(candidates=(0, 3, 6, 13), ewma_alpha=1.0,
+                            min_samples=1, hysteresis=0.05, dwell=2)
+    ctl = AdaptiveSplitController.for_deployment(
+        cfg, policy, 0, mcu_profile(50.0), masks=masks, compact=True)
+    fast, slow = 50e6 / 8, 2e6 / 8
+    # at the deployment bandwidth the current split stays optimal
+    assert ctl.step(12_000, 12_000 / fast + 1e-3) is None
+    assert ctl.step(12_000, 12_000 / fast + 1e-3) is None
+    # the link collapses; dwell already satisfied, so the sweep fires
+    sw = ctl.step(12_000, 12_000 / slow + 1e-3)
+    assert sw is not None and sw.old_split == 0 and sw.new_split != 0
+    assert ctl.split == sw.new_split
+    # dwell: the very next observation cannot switch again
+    assert ctl.step(12_000, 12_000 / slow + 1e-3) is None
+    assert len(ctl.history) == 1
+
+
+def test_controller_hysteresis_blocks_marginal_wins(pruned_setup):
+    cfg, params, masks, _ = pruned_setup
+    policy = AdaptivePolicy(candidates=(0, 3, 6, 13), ewma_alpha=1.0,
+                            min_samples=1, hysteresis=10.0, dwell=1)
+    ctl = AdaptiveSplitController.for_deployment(
+        cfg, policy, 0, mcu_profile(50.0), masks=masks, compact=True)
+    # impossible hysteresis: even a collapsed link must not trigger
+    for _ in range(5):
+        assert ctl.step(12_000, 12_000 / (2e6 / 8) + 1e-3) is None
+    assert ctl.split == 0
+
+
+def test_controller_rejects_initial_split_outside_candidates(pruned_setup):
+    cfg, _, masks, _ = pruned_setup
+    policy = AdaptivePolicy(candidates=(3, 6))
+    with pytest.raises(ValueError, match="candidates"):
+        AdaptiveSplitController.for_deployment(cfg, policy, 5,
+                                               mcu_profile(50.0),
+                                               masks=masks, compact=True)
+
+
+# ---------------------------------------------------------------------------
+# RESPLIT protocol + fn bank
+# ---------------------------------------------------------------------------
+def test_resplit_frame_roundtrip():
+    buf = encode_resplit(11)
+    assert is_resplit(buf) and not is_hello(buf)
+    split, status, version = decode_resplit(buf)
+    assert (split, status, version) == (11, 0, PROTOCOL_VERSION)
+    split, status, _ = decode_resplit(encode_resplit(3, status=1))
+    assert (split, status) == (3, 1)
+    with pytest.raises(ValueError, match="magic"):
+        decode_resplit(b"\0" * 16)
+
+
+def test_split_fn_bank_caches_and_validates(pruned_setup):
+    cfg, params, masks, x = pruned_setup
+    bank = SplitFnBank(params, cfg, masks, compact=True)
+    e1, c1, _ = bank.get(6)
+    assert bank.get(6)[0] is e1                    # cached
+    with pytest.raises(ValueError, match="split"):
+        bank.get(99)
+    bank.warm((0, 6, 13), x)
+    want = np.asarray(c1(e1(x)))
+    edge13, cloud13, _ = bank.get(13)
+    np.testing.assert_array_equal(np.asarray(edge13(x)), want)
+
+
+def test_collab_runner_set_split_is_bit_stable(pruned_setup):
+    cfg, params, masks, x = pruned_setup
+    runner = CollabRunner(params, cfg, 6, PAPER_PROFILE, masks=masks,
+                          compact=True, codec="fp32")
+    want = runner.infer(x)["logits"]
+    for c in (0, 3, 13, 6):
+        runner.set_split(c)
+        np.testing.assert_array_equal(runner.infer(x)["logits"], want)
+
+
+# ---------------------------------------------------------------------------
+# live socket resplit (no reconnect)
+# ---------------------------------------------------------------------------
+def make_adaptive_plan(pruned_setup, port, **kw):
+    cfg, params, masks, _ = pruned_setup
+    kw.setdefault("adaptive",
+                  AdaptivePolicy(candidates=(0, 3, 6, 13)))
+    return serving.DeploymentPlan.from_args(
+        params, cfg, 6, masks=masks, compact=True, codec="fp32",
+        shape_link=False, port=port, **kw)
+
+
+def test_socket_resplit_switches_without_reconnect(pruned_setup):
+    _, _, _, x = pruned_setup
+    plan = make_adaptive_plan(pruned_setup, port=29530)
+    with serving.CloudServer(plan, max_clients=1):
+        with serving.connect(plan, backend="socket") as sess:
+            want = sess.infer(x)["logits"]
+            sock_before = sess._client.sock
+            for c in (3, 13, 0, 6):
+                sess.resplit(c)
+                assert sess.split == c
+                np.testing.assert_array_equal(sess.infer(x)["logits"],
+                                              want)
+            assert sess._client.sock is sock_before    # same connection
+
+
+def test_shaped_socket_t_tx_is_modeled_link_cost(pruned_setup):
+    """On a shaped socket the estimator's t_tx signal is the shaper's
+    modeled cost (payload/bandwidth + RTT), not the burst-distorted
+    wall-clock — the signal is deterministic and tracks the link."""
+    cfg, params, masks, x = pruned_setup
+    link = LinkProfile("slow", bandwidth=1e6, rtt_s=5e-3)
+    plan = serving.DeploymentPlan.from_args(
+        params, cfg, 3, masks=masks, compact=True, codec="fp32",
+        port=29535, profile=TwoTierProfile(MCU_EDGE, PAPER_PROFILE.server,
+                                           link))
+    with serving.CloudServer(plan, max_clients=1):
+        with serving.connect(plan, backend="socket") as sess:
+            res = sess.infer(x)
+            t_tx = sess._client.infer(x)["t_tx"]
+    # payload + 8B prefix over 1 MB/s + 5 ms RTT
+    assert t_tx == pytest.approx((res["tx_bytes"] + 8) / 1e6 + 5e-3,
+                                 rel=0.05)
+
+
+def test_manual_resplit_restarts_controller_dwell(pruned_setup):
+    cfg, _, masks, _ = pruned_setup
+    policy = AdaptivePolicy(candidates=(0, 3, 6, 13), ewma_alpha=1.0,
+                            min_samples=1, hysteresis=0.0, dwell=3)
+    ctl = AdaptiveSplitController.for_deployment(
+        cfg, policy, 0, mcu_profile(50.0), masks=masks, compact=True)
+    slow = 2e6 / 8
+    for _ in range(3):
+        ctl.observe(12_000, 12_000 / slow + 1e-3)
+    ctl.note_external_switch(13)         # operator override
+    assert ctl.split == 13
+    # dwell restarted: the controller holds the override for 3 requests
+    assert ctl.step(500, 500 / slow + 1e-3) is None
+    assert ctl.split == 13
+
+
+def test_socket_adaptive_infer_many_keeps_control_loop(pruned_setup):
+    """infer_many on an adaptive plan falls back to the sequential loop
+    (a RESPLIT cannot interleave with in-flight pipelined frames), so the
+    controller still observes every request."""
+    _, _, _, x = pruned_setup
+    plan = make_adaptive_plan(pruned_setup, port=29536)
+    with serving.CloudServer(plan, max_clients=1):
+        with serving.connect(plan, backend="socket") as sess:
+            out = sess.infer_many([x] * 3)
+            assert sess._controller.n_requests == 3
+    # sequential results carry per-request upstream time (pipelined don't)
+    assert all(r["t_upstream"] is not None for r in out)
+
+
+def test_socket_resplit_outside_candidates_rejected(pruned_setup):
+    _, _, _, x = pruned_setup
+    plan = make_adaptive_plan(pruned_setup, port=29531)
+    with serving.CloudServer(plan, max_clients=1):
+        with serving.connect(plan, backend="socket") as sess:
+            want = sess.infer(x)["logits"]
+            with pytest.raises(serving.PlanMismatchError, match="resplit"):
+                sess.resplit(5)            # not in (0, 3, 6, 13)
+            # the connection survives a rejected proposal
+            np.testing.assert_array_equal(sess.infer(x)["logits"], want)
+            assert sess.split == 6
+
+
+# ---------------------------------------------------------------------------
+# adaptive sessions end-to-end on a degrading trace
+# ---------------------------------------------------------------------------
+def test_adaptive_local_session_resplits_on_degrading_trace(pruned_setup):
+    cfg, params, masks, x = pruned_setup
+    trace = LinkTrace.from_mbps(
+        "degrade", [(0.08, 50.0), (float("inf"), 2.0)], rtt_ms=1.0)
+    policy = AdaptivePolicy(candidates=(0, 3, 6, 13), ewma_alpha=0.5,
+                            min_samples=2, hysteresis=0.05, dwell=2)
+    plan = serving.DeploymentPlan.from_args(
+        params, cfg, 0, masks=masks, compact=True, codec="fp32",
+        profile=mcu_profile(50.0), adaptive=policy, shape_link=False)
+    sess = serving.connect(plan, backend="local", trace=trace)
+    fixed = serving.connect(
+        serving.DeploymentPlan.from_args(params, cfg, 0, masks=masks,
+                                         compact=True, codec="fp32",
+                                         profile=mcu_profile(50.0),
+                                         shape_link=False),
+        backend="local", trace=trace)
+    for _ in range(24):
+        res, ref = sess.infer(x), fixed.infer(x)
+        np.testing.assert_array_equal(res["logits"], ref["logits"])
+    assert len(sess.switches) >= 1, "never re-split on a collapsing link"
+    assert sess.split != 0
+    assert sess.switches[0].old_split == 0
+
+
+# ---------------------------------------------------------------------------
+# plan contract: the adaptive section
+# ---------------------------------------------------------------------------
+def test_plan_adaptive_section_in_digest(pruned_setup):
+    base = make_adaptive_plan(pruned_setup, port=29532, adaptive=None)
+    adaptive = make_adaptive_plan(pruned_setup, port=29532)
+    assert "adaptive" not in base.contract()
+    assert adaptive.contract()["adaptive"]["candidates"] == [0, 3, 6, 13]
+    assert base.digest != adaptive.digest
+    other = make_adaptive_plan(
+        pruned_setup, port=29532,
+        adaptive=AdaptivePolicy(candidates=(0, 3, 6, 13), dwell=9))
+    assert other.digest != adaptive.digest        # knobs are contractual
+
+
+def test_plan_adaptive_candidates_normalized_and_validated(pruned_setup):
+    plan = make_adaptive_plan(
+        pruned_setup, port=29533,
+        adaptive=AdaptivePolicy(candidates=(3, 3, 0)))
+    assert plan.adaptive.candidates == (0, 3, 6)   # sorted, uniq, + split
+    with pytest.raises(ValueError, match="candidates"):
+        make_adaptive_plan(pruned_setup, port=29533,
+                           adaptive=AdaptivePolicy(candidates=(99,)))
+
+
+def test_plan_adaptive_save_load_roundtrip(pruned_setup, tmp_path):
+    plan = make_adaptive_plan(pruned_setup, port=29534)
+    path = plan.save(str(tmp_path / "adeploy"))
+    loaded = serving.DeploymentPlan.load(path)
+    assert loaded.digest == plan.digest
+    assert loaded.adaptive == plan.adaptive

@@ -226,6 +226,49 @@ def test_serve_cloud_multi_client_concurrent_edges(plan_setup):
 
 
 # ---------------------------------------------------------------------------
+# wire accounting: payload parity across backends, analytic == measured
+# ---------------------------------------------------------------------------
+def test_tx_bytes_payload_identical_across_backends(plan_setup):
+    """Acceptance: the same plan reports the same tx_bytes on every
+    backend — payload bytes only, excluding the socket path's 8-byte
+    length prefix (the historical +8 discrepancy)."""
+    _, _, _, x2, _ = plan_setup
+    x = x2[:1]
+    plan = make_plan(plan_setup, port=29517)
+    local = serving.connect(plan, backend="local").infer(x)
+    stream = serving.connect(plan, backend="streaming",
+                             realtime_channel=False).infer(x)
+    with serving.CloudServer(plan):
+        with serving.connect(plan, backend="socket") as sess:
+            sock = sess.infer(x)
+    assert local["tx_bytes"] > 0
+    assert local["tx_bytes"] == sock["tx_bytes"] == stream["tx_bytes"]
+
+
+@pytest.mark.parametrize("codec,pack,compact", [
+    ("fp32", False, True), ("fp16", False, True), ("int8", False, True),
+    ("fp32", True, False), ("int8", True, False), ("fp32", False, False),
+])
+def test_analytic_tx_bytes_matches_measured_payload(plan_setup, codec,
+                                                    pack, compact):
+    """The re-priced tx_scale (codec x packing, ``wire_tx_scale``) makes
+    the analytic Eq. 5 tx_bytes agree with the measured frame payload —
+    including the masked-but-dense unpacked case, which ships the full
+    tensor (zeros included)."""
+    from repro.core.collab.runtime import CollabRunner
+    cfg, params, masks, x, _ = plan_setup
+    runner = CollabRunner(params, cfg, SPLIT, serving.DeploymentPlan(
+        cfg=cfg, params=params, split=SPLIT).profile, masks=masks,
+        compact=compact, codec=codec, pack=pack)
+    measured = runner.infer(x[:1])["timing"].tx_bytes
+    analytic = runner._analytic["tx_bytes"]
+    # frame headers (magic/shape/bitmask/quant params) are not modelled:
+    # allow tens of bytes, not the ~KBs a keep-ratio mistake would cause
+    assert abs(measured - analytic) <= 160, (codec, pack, compact,
+                                             measured, analytic)
+
+
+# ---------------------------------------------------------------------------
 # satellites: deploy_submodels guard, EdgeClient host/timeout
 # ---------------------------------------------------------------------------
 def test_deploy_submodels_compact_without_masks_raises(plan_setup):
