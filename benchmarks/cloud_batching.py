@@ -1,0 +1,282 @@
+"""Cross-client dynamic batching: cloud req/s vs concurrent edges (BENCH).
+
+The claim: with N edges connected concurrently, the cloud peer's dynamic
+batching engine (``repro.core.collab.batching``) recovers the throughput
+the threaded batch-1 server leaves on the table — N handler threads each
+dispatch a serial batch-1 device invocation per frame, while the batcher
+fuses the same concurrent requests into ONE bucketed cloud call per
+window. Logits are bit-identical to sequential serving (the batched
+executable maps the batch-1 computation over rows).
+
+Measured on real localhost sockets with the **sim profile**: every cloud
+invocation is charged its analytic ``batched_server_time`` on the
+paper's RTX 3090, serialized server-wide (``serve(simulate_server=...)``
+— the same stance as ``CollabRunner.simulate_compute``: this container
+is not a 3090, and N colocated batch-1 calls would otherwise borrow
+*this host's* CPU parallelism, which the one-accelerator target does not
+have). Real jitted compute still runs first, so the bit-identity checks
+are real. Link shaping is off — the engine is the unit under test, not
+the modeled radio. Reported per engine and edge count:
+
+  * req/s and per-request p50/p95 latency (the batching window is a
+    deliberate latency-for-throughput trade — at high concurrency it
+    wins BOTH, because a fused batch clears the serial device queue
+    8x faster than eight batch-1 invocations);
+  * per-lane occupancy, average fused batch size, padding waste;
+  * a real-compute (no sim) contrast pair at max edges, reported
+    unasserted — colocated edges contend with the cloud for this
+    container's cores, which no fleet deployment does.
+
+Emits ``experiments/bench/cloud_batching.json`` and the tracked
+``BENCH_collab.json`` perf record (req/s, p50/p95, tx bytes, padding
+waste — the trajectory CI uploads).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table, write_collab_record
+from repro import serving
+from repro.core.partition.latency_model import (batched_server_time,
+                                                cnn_input_bytes,
+                                                compacted_cnn_layer_costs)
+from repro.core.partition.profiles import (ComputeProfile, PAPER_PROFILE,
+                                           TwoTierProfile)
+from repro.core.partition.splitter import greedy_split
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import init_cnn_params, prunable_layers, tiny_cnn_config
+
+BASE_PORT = 29750
+
+#: the heavy-traffic regime the engine targets: MANY thin edges, one fat
+#: cloud. An MCU-class edge keeps only the first layers (same profile
+#: trick as benchmarks/adaptive_split.py — on paper hardware the tiny
+#: 32px CNN would be device-dominant and leave the cloud nothing to
+#: batch); the greedy sweep then plants the split early and the cloud
+#: carries the bulk of the network, which is what a fleet deployment
+#: looks like from the server room.
+MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
+                          mem_bw=0.5e9, overhead_s=3e-4)
+FARM_PROFILE = TwoTierProfile(MCU_EDGE, PAPER_PROFILE.server,
+                              PAPER_PROFILE.link)
+
+
+def _serve_edges(plan, n_edges: int, imgs, port: int,
+                 simulate_server=None, pipeline: bool = False):
+    """Drive one server with ``n_edges`` concurrent edges.
+
+    ``pipeline=False`` — closed-loop: each edge serves its request list
+    synchronously (1 outstanding request per edge), which is what
+    per-request p50/p95 latency means. ``pipeline=True`` — each edge
+    ships its whole list through the pipelined ``infer_many`` (async
+    submit/collect), the sustained-traffic regime: the server always has
+    a backlog, so measured req/s reflects engine capacity rather than
+    the thread-scheduling luck of N closed loops staying in phase.
+    Returns (wall_s, per-request latencies, per-edge logits, batch stats).
+    """
+    lat = [[] for _ in range(n_edges)]
+    logits = [[] for _ in range(n_edges)]
+    errs = []
+    barrier = threading.Barrier(n_edges + 1)
+
+    def edge(i):
+        try:
+            with serving.connect(plan, backend="socket", port=port) as s:
+                s.infer(imgs[0])     # warm this edge's jits off the clock
+                barrier.wait()
+                if pipeline:
+                    t0 = time.perf_counter()
+                    res = s.infer_many(imgs)
+                    dt = time.perf_counter() - t0
+                    lat[i] = [dt / len(imgs)] * len(imgs)
+                    logits[i] = [r["logits"] for r in res]
+                    return
+                for img in imgs:
+                    t0 = time.perf_counter()
+                    r = s.infer(img)
+                    lat[i].append(time.perf_counter() - t0)
+                    logits[i].append(r["logits"])
+        except Exception as e:                           # noqa: BLE001
+            errs.append(e)
+            try:
+                barrier.abort()
+            except threading.BrokenBarrierError:
+                pass
+
+    with serving.CloudServer(plan, port=port, max_clients=None,
+                             simulate_server=simulate_server) as srv:
+        ts = [threading.Thread(target=edge, args=(i,))
+              for i in range(n_edges)]
+        for t in ts:
+            t.start()
+        barrier.wait()                   # all edges connected and warmed
+        t0 = time.perf_counter()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+        srv.stop()
+        stats = dict(srv.batch_stats)
+    if errs:
+        raise errs[0]
+    return wall, [x for per in lat for x in per], logits, stats
+
+
+def _row(label, n_edges, n_requests, wall, lats, stats):
+    lane = next(iter(stats.values())) if stats else {}
+    return {"engine": label, "edges": n_edges,
+            "req_s": n_edges * n_requests / wall,
+            "p50_ms": float(np.percentile(lats, 50)) * 1e3,
+            "p95_ms": float(np.percentile(lats, 95)) * 1e3,
+            "avg_batch": lane.get("avg_batch"),
+            "pad_waste": lane.get("padding_waste")}
+
+
+def run(fast: bool = False, smoke: bool = False) -> dict:
+    fast = fast or smoke
+    n_requests = 8 if smoke else (16 if fast else 32)
+    # sustained-traffic phase: enough backlog per edge that steady state
+    # dominates connection ramp-up (it is what the req/s claim is about)
+    n_stream = 4 * n_requests
+    edge_counts = (2, 8) if fast else (1, 2, 4, 8)
+    max_batch = 8
+
+    cfg = tiny_cnn_config(num_classes=38, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(params, cfg,
+                                  {i: 0.5 for i in prunable_layers(cfg)})
+    n = len(cfg.layers)
+    costs = compacted_cnn_layer_costs(cfg, masks)
+    split = greedy_split(costs, FARM_PROFILE, cnn_input_bytes(cfg),
+                         candidates=range(1, n), tx_scale=0.25).split_point
+
+    # fp32 codec: the throughput phases below are feed-limited by edge
+    # CPU on this container, and per-frame int8 quantization would bill
+    # both engines the same extra encode cost without changing the
+    # engine comparison (codec coverage lives in tests/test_batching.py
+    # and benchmarks/collab_throughput.py)
+    policy = serving.BatchingPolicy(max_batch=max_batch, max_wait_ms=3.0)
+    mk = dict(masks=masks, compact=True, codec="fp32", shape_link=False)
+    plain = serving.DeploymentPlan.from_args(params, cfg, split, **mk)
+    batched = serving.DeploymentPlan.from_args(params, cfg, split,
+                                               batching=policy, **mk)
+    print(batched.describe())
+    t1 = batched_server_time(costs, split, PAPER_PROFILE.server, 1)
+    t8 = batched_server_time(costs, split, PAPER_PROFILE.server, max_batch)
+    print(f"sim 3090 T_S: batch-1 {t1 * 1e3:.3f} ms/req, bucket-{max_batch} "
+          f"{t8 / max_batch * 1e3:.3f} ms/req "
+          f"({t1 * max_batch / t8:.2f}x amortization headroom)")
+
+    rng = np.random.RandomState(0)
+    imgs = [jax.device_put(rng.rand(1, 32, 32, 3).astype(np.float32))
+            for _ in range(n_requests)]       # pre-staged: a real edge
+    # holds its camera frame on-device already; per-request host->device
+    # copies would bill the *harness* to both engines equally
+
+    # sequential reference (local backend, same frames) — every serving
+    # mode below must reproduce these logits BIT-identically
+    with serving.connect(plain, backend="local") as ref_sess:
+        ref = [ref_sess.infer(img)["logits"] for img in imgs]
+
+    stream_imgs = [imgs[i % n_requests] for i in range(n_stream)]
+
+    def check(label, n_edges, logits):
+        for per_edge in logits:
+            for j, b in enumerate(per_edge):
+                assert np.array_equal(ref[j % n_requests], b), (
+                    f"{label} @ {n_edges} edges: logits diverged from "
+                    f"sequential serving")
+
+    rows, sweep = [], {}
+    port = BASE_PORT
+    top = max(edge_counts)
+    for n_edges in edge_counts:
+        # best-of-3 at the headline point: 30+ python threads on a small
+        # container make single trials scheduling-noisy; best-of controls
+        # for the harness, not the engine
+        trials = 3 if n_edges == top else 1
+        for label, plan in (("threaded-b1", plain), ("batched", batched)):
+            best_wall = None
+            for _ in range(trials):
+                # sustained traffic (pipelined bursts): the req/s claim
+                wall, _, logits, stats = _serve_edges(
+                    plan, n_edges, stream_imgs, port,
+                    simulate_server=PAPER_PROFILE.server, pipeline=True)
+                port += 1
+                check(label, n_edges, logits)
+                if best_wall is None or wall < best_wall:
+                    best_wall, best_stats = wall, stats
+            # closed loop (1 outstanding/edge): the latency distribution
+            _, lats, logits2, _ = _serve_edges(
+                plan, n_edges, imgs, port,
+                simulate_server=PAPER_PROFILE.server)
+            check(label, n_edges, logits2)
+            port += 1
+            row = _row(label, n_edges, n_stream, best_wall, lats,
+                       best_stats)
+            rows.append(row)
+            sweep[f"{label}_{n_edges}"] = row
+        base = sweep[f"threaded-b1_{n_edges}"]["req_s"]
+        sweep[f"speedup_{n_edges}"] = (sweep[f"batched_{n_edges}"]["req_s"]
+                                       / base)
+
+    print(table(rows, ["engine", "edges", "req_s", "p50_ms", "p95_ms",
+                       "avg_batch", "pad_waste"],
+                f"split c={split}, compact+fp32, max_batch={max_batch}, "
+                f"window 3 ms, sim-3090 cloud; req/s over {n_stream} "
+                f"pipelined req/edge, p50/p95 closed-loop over "
+                f"{n_requests} (logits bit-identical to sequential)"))
+    speedup = sweep[f"speedup_{top}"]
+    print(f"   batched vs threaded-batch-1 at {top} edges: "
+          f"{speedup:.2f}x req/s")
+
+    # real-compute contrast (no device sim): colocated edges contend with
+    # the cloud for this container's cores, so this under-reports the
+    # engine — reported, not asserted
+    real = {}
+    for label, plan in (("threaded-b1", plain), ("batched", batched)):
+        wall, lats, logits, stats = _serve_edges(plan, top, stream_imgs,
+                                                 port, pipeline=True)
+        port += 1
+        check(f"real/{label}", top, logits)
+        real[label] = _row(label, top, n_stream, wall, lats, stats)
+    real_speedup = real["batched"]["req_s"] / real["threaded-b1"]["req_s"]
+    print(f"   real-compute contrast at {top} edges (colocated, "
+          f"{real['threaded-b1']['req_s']:.0f} vs "
+          f"{real['batched']['req_s']:.0f} req/s): {real_speedup:.2f}x")
+
+    with serving.connect(plain, backend="local") as s:
+        tx_bytes = int(s.infer(imgs[0])["tx_bytes"])
+
+    floor = 1.5 if smoke else 2.0       # smoke: tiny run, CI-noise margin
+    assert speedup >= floor, (
+        f"batched engine {speedup:.2f}x < {floor}x threaded batch-1 at "
+        f"{top} edges")
+
+    out = {"split": int(split), "n_requests": n_requests,
+           "max_batch": max_batch, "edge_counts": list(edge_counts),
+           "rows": rows, "speedup_at_max_edges": speedup,
+           "real_compute_at_max_edges": real,
+           "real_compute_speedup": real_speedup,
+           "tx_bytes_per_request": tx_bytes,
+           "analytic_server_amortization": t1 * max_batch / t8,
+           "bit_identical": True}
+    save_result("cloud_batching", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests, 2 edge counts)")
+    args = ap.parse_args()
+    # standalone invocation (the CI smoke path) owns the tracked record;
+    # a full `benchmarks.run --json` pass writes it instead, with the
+    # streaming numbers filled in
+    print(f"perf record: "
+          f"{write_collab_record(run(fast=args.fast, smoke=args.smoke))}")

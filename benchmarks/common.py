@@ -19,6 +19,38 @@ def save_result(name: str, payload: Dict) -> str:
     return fn
 
 
+def write_collab_record(cloud_batching: Dict,
+                        collab_throughput: Dict = None) -> str:
+    """The tracked collab-serving perf record, ``BENCH_collab.json``:
+    one flat summary (req/s, p50/p95, tx bytes, padding waste) distilled
+    from the cloud_batching sweep, plus the streaming numbers when a
+    full ``benchmarks.run --json`` pass has them (``None`` otherwise —
+    the schema is identical either way, so the serving-path trajectory
+    is comparable across commits). Written by exactly one caller per
+    invocation: ``benchmarks.cloud_batching`` run as ``__main__`` (the
+    CI smoke path), or ``benchmarks.run --json``. CI uploads it as an
+    artifact."""
+    top = max(cloud_batching["edge_counts"])
+    rows = {(r["engine"], r["edges"]): r for r in cloud_batching["rows"]}
+    b, t = rows[("batched", top)], rows[("threaded-b1", top)]
+    ct = collab_throughput or {}
+    rec = {
+        "edges": top,
+        "batched_req_s": b["req_s"],
+        "threaded_b1_req_s": t["req_s"],
+        "speedup": cloud_batching["speedup_at_max_edges"],
+        "p50_ms": b["p50_ms"],
+        "p95_ms": b["p95_ms"],
+        "avg_batch": b["avg_batch"],
+        "padding_waste": b["pad_waste"],
+        "tx_bytes_per_request": cloud_batching["tx_bytes_per_request"],
+        "bit_identical": cloud_batching["bit_identical"],
+        "streaming_pipelined_req_s": ct.get("pipelined_rps"),
+        "streaming_sequential_req_s": ct.get("sequential_rps"),
+    }
+    return save_result("BENCH_collab", rec)
+
+
 def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
     widths = {c: max([len(c)] + [len(_fmt(r.get(c))) for r in rows])
               for c in cols}

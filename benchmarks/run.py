@@ -10,15 +10,18 @@ import sys
 import time
 import traceback
 
-from benchmarks import (adaptive_split, collab_throughput, fig4_layerwise,
-                        fig5_methods, kernels_bench, roofline_report,
-                        table1_accuracy, table2_split_latency)
+from benchmarks import (adaptive_split, cloud_batching, collab_throughput,
+                        fig4_layerwise, fig5_methods, kernels_bench,
+                        roofline_report, table1_accuracy,
+                        table2_split_latency)
+from benchmarks.common import write_collab_record
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
     ("fig4_layerwise", fig4_layerwise.run),
     ("fig5_methods", fig5_methods.run),
     ("collab_throughput", collab_throughput.run),
+    ("cloud_batching", cloud_batching.run),
     ("adaptive_split", adaptive_split.run),
     ("kernels", kernels_bench.run),
     ("table1_accuracy", table1_accuracy.run),
@@ -31,20 +34,30 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes/epochs for CI-style runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write the tracked BENCH_collab.json perf record "
+                         "(req/s, p50/p95, tx bytes, padding waste, "
+                         "streaming req/s) from the collab-serving "
+                         "results of this pass")
     args = ap.parse_args()
     failures = []
+    results = {}
     for name, fn in BENCHES:
         if args.only and args.only != name:
             continue
         print(f"\n######## {name} ########")
         t0 = time.time()
         try:
-            fn(fast=args.fast)
+            results[name] = fn(fast=args.fast)
             print(f"######## {name}: OK ({time.time() - t0:.1f}s)")
         except Exception:                               # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
             print(f"######## {name}: FAILED")
+    if args.json and "cloud_batching" in results:
+        fn = write_collab_record(results["cloud_batching"],
+                                 results.get("collab_throughput"))
+        print(f"\nperf record: {fn}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

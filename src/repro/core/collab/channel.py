@@ -17,6 +17,7 @@ adaptive split controller estimates bandwidth from.
 from __future__ import annotations
 
 import socket
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -95,12 +96,64 @@ class SimChannel:
         return t
 
 
+class LinkShaper:
+    """One token bucket modeling one physical link, shareable by many
+    sockets.
+
+    A wireless medium is a *shared* resource: every station associated
+    with the access point contends for the same airtime. Modeling each
+    TCP connection with its own private token bucket therefore multiplies
+    the physical link by the number of connections. A ``LinkShaper`` is
+    the fix — one bucket per physical medium; every ``ShapedSocket``
+    wrapped around it draws tokens from the same budget, so N concurrent
+    senders each see ~1/N of the modeled bandwidth.
+
+    ``pace`` is thread-safe; the lock is deliberately held across the
+    pacing sleep, which serializes concurrent senders exactly the way a
+    busy channel serializes transmissions. With a ``trace``, the refill
+    rate follows the trace at the wall-clock offset since construction.
+    """
+
+    def __init__(self, link: LinkProfile, trace: Optional[LinkTrace] = None,
+                 burst_s: float = 0.05):
+        self.link = link
+        self.trace = trace
+        self.burst_s = burst_s
+        self._lock = threading.Lock()
+        self._budget = 0.0
+        self._t0 = time.perf_counter()
+        self._last = self._t0
+
+    def state(self, now: float):
+        """(bandwidth, rtt_s) the shaper is enforcing right now."""
+        if self.trace is None:
+            return self.link.bandwidth, self.link.rtt_s
+        return self.trace.state_at(now - self._t0)
+
+    def pace(self, nbytes: int) -> None:
+        """Block until the bucket can carry ``nbytes`` more bytes."""
+        with self._lock:
+            now = time.perf_counter()
+            bw = self.state(now)[0]
+            self._budget += (now - self._last) * bw
+            self._budget = min(self._budget, bw * self.burst_s)
+            self._last = now
+            if nbytes > self._budget:
+                need = (nbytes - self._budget) / bw
+                time.sleep(need)
+                self._last = time.perf_counter()
+                self._budget = 0.0
+            else:
+                self._budget -= nbytes
+
+
 class ShapedSocket:
     """Token-bucket pacing on top of a connected socket (both directions).
 
-    With a ``trace``, the refill rate follows the trace at the wall-clock
-    offset since construction — the socket path's stand-in for a link that
-    degrades mid-deployment.
+    By default each ShapedSocket owns a private ``LinkShaper``; pass
+    ``shaper=`` to make several sockets contend for one modeled physical
+    link (``serve_cloud`` does this — one bucket per server, so N
+    concurrent edges share the medium instead of multiplying it).
 
     ``last_send_cost_s`` is the *modeled* link cost of the most recent
     ``sendall`` (bytes over the shaped bandwidth at send time, plus one
@@ -111,44 +164,24 @@ class ShapedSocket:
     """
 
     def __init__(self, sock: socket.socket, link: LinkProfile,
-                 chunk: int = 16384, trace: Optional[LinkTrace] = None):
+                 chunk: int = 16384, trace: Optional[LinkTrace] = None,
+                 shaper: Optional[LinkShaper] = None):
         self.sock = sock
-        self.link = link
+        self.shaper = shaper or LinkShaper(link, trace=trace)
+        self.link = self.shaper.link
         self.chunk = chunk
-        self.trace = trace
-        self._budget = 0.0
-        self._t0 = time.perf_counter()
-        self._last = self._t0
+        self.trace = self.shaper.trace
         self.last_send_cost_s = 0.0
 
     def _state(self, now: float):
         """(bandwidth, rtt_s) the shaper is enforcing right now."""
-        if self.trace is None:
-            return self.link.bandwidth, self.link.rtt_s
-        return self.trace.state_at(now - self._t0)
-
-    def _bandwidth(self, now: float) -> float:
-        return self._state(now)[0]
-
-    def _pace(self, nbytes: int) -> None:
-        now = time.perf_counter()
-        bw = self._bandwidth(now)
-        self._budget += (now - self._last) * bw
-        self._budget = min(self._budget, bw * 0.05)
-        self._last = now
-        if nbytes > self._budget:
-            need = (nbytes - self._budget) / bw
-            time.sleep(need)
-            self._last = time.perf_counter()
-            self._budget = 0.0
-        else:
-            self._budget -= nbytes
+        return self.shaper.state(now)
 
     def sendall(self, data: bytes) -> None:
         cost, rtt = 0.0, 0.0
         for i in range(0, len(data), self.chunk):
             piece = data[i:i + self.chunk]
-            self._pace(len(piece))
+            self.shaper.pace(len(piece))
             self.sock.sendall(piece)
             bw, rtt = self._state(time.perf_counter())
             cost += len(piece) / bw

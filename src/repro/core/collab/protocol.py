@@ -185,6 +185,8 @@ def decode_feature(buf: bytes) -> Tuple[np.ndarray, int]:
                         offset=off).reshape(wire_shape)
     if codec == "int8":
         x = raw.astype(np.float32) * scale + zero
+    elif raw.dtype == np.float32:
+        x = raw          # zero-copy (read-only view) on the fp32 hot path
     else:
         x = raw.astype(np.float32)
     if packed:
@@ -253,6 +255,20 @@ def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:
     if magic == FEATURE_MAGIC:
         return decode_feature(buf)
     return decode_tensor(buf)
+
+
+def frame_lane(buf: bytes) -> str:
+    """Wire-encoding lane tag of a tensor/feature frame, without decoding
+    the payload: ``"raw"`` for a plain tensor frame, else the codec name
+    with ``"+packed"`` appended when channel packing is on. The dynamic
+    batching engine keys its per-lane queues on this (frames that took
+    different wire paths are batched separately, so per-lane accounting
+    stays attributable per encoding)."""
+    (magic,) = struct.unpack_from("<I", buf, 0)
+    if magic != FEATURE_MAGIC:
+        return "raw"
+    _, codec_id, packed, _ = _FHDR.unpack_from(buf, 0)
+    return CODEC_NAMES[codec_id] + ("+packed" if packed else "")
 
 
 def write_tensor(fp: BinaryIO, arr: np.ndarray) -> int:

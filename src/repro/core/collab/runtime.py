@@ -32,6 +32,17 @@ For overlapped (pipelined) streaming service of many requests, see
 ``repro.core.collab.streaming.StreamingCollabRunner`` (in-process) and
 ``EdgeClient.submit``/``collect`` (async socket path).
 
+*Cross-client dynamic batching* (``serve_cloud(batching=...)``): handler
+threads stop invoking the cloud sub-model per frame and submit decoded
+features to the ``DynamicBatcher`` (``repro.core.collab.batching``) —
+per-lane queues, a short batching window, power-of-two bucket padding,
+ONE row-mapped jitted cloud call per fused batch, logits bit-identical
+to the unbatched path. All connections of one server also share ONE
+``LinkShaper`` token bucket for the bytes the server transmits, so N
+concurrent edges contend for the modeled downlink instead of each
+getting a private copy of it (each edge's uplink is still paced by that
+edge's own radio — its private shaper).
+
 *Adaptive split switching*: every executor resolves its sub-model
 functions through a ``SplitFnBank`` — one deployed parameter set, a
 jitted (edge_fn, cloud_fn) pair per candidate split — so changing the
@@ -62,13 +73,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CNNConfig
-from repro.core.collab.channel import ShapedSocket, SimChannel, recv_exact
+from repro.core.collab.batching import (BatchingPolicy, DynamicBatcher,
+                                        next_pow2_bucket, pad_rows)
+from repro.core.collab.channel import (LinkShaper, ShapedSocket, SimChannel,
+                                       recv_exact)
 from repro.core.collab.protocol import (CODEC_TX_SCALE, PROTOCOL_VERSION,
                                         PlanMismatchError, decode_any,
                                         decode_hello, decode_resplit,
                                         decode_tensor, encode_feature,
                                         encode_hello, encode_resplit,
-                                        encode_tensor, is_hello, is_resplit)
+                                        encode_tensor, frame_lane, is_hello,
+                                        is_resplit)
 from repro.core.partition.profiles import (LinkProfile, LinkTrace,
                                            TwoTierProfile)
 from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
@@ -132,44 +147,119 @@ class SplitFnBank:
         self.compact = compact
         self.n_layers = len(self.deploy_cfg.layers)
         self._fns: Dict[int, Tuple] = {}
+        self._batched_fns: Dict[int, Tuple] = {}
+        #: traced-body counter — bumps once every time XLA (re)traces any
+        #: sub-model function of this bank (a new split, a new batch
+        #: bucket shape). ``warm`` followed by a steady count is the
+        #: no-recompilation-in-steady-state regression guard.
+        self.n_traces = 0
 
-    def get(self, split: int):
+    def _build(self, split: int) -> Tuple:
+        dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
+
+        def _edge(x):
+            self.n_traces += 1          # runs at trace time only
+            return cnn_apply(dparams, dcfg, x, masks=dmasks,
+                             stop_layer=split)
+
+        def _cloud(x):
+            self.n_traces += 1          # runs at trace time only
+            return cnn_apply(dparams, dcfg, jnp.asarray(x), masks=dmasks,
+                             start_layer=split)
+
+        edge_fn = jax.jit(_edge) if split > 0 else None
+        cloud_fn = jax.jit(_cloud) if split < self.n_layers else None
+        keep = (split_keep_indices(dcfg, dmasks, split)
+                if self.pack and not self.compact else None)
+        return edge_fn, cloud_fn, keep
+
+    def _build_batched(self, split: int) -> Tuple:
+        """Row-mapped variants: the batch-1 computation mapped over the
+        leading axis (``jax.lax.map``) in ONE jitted call. Per-row results
+        are bit-identical to the batch-1 functions — which a free
+        reshape-to-batched conv would NOT guarantee (XLA may re-associate
+        reductions under a different batch shape) — so the dynamic
+        batching engine can promise batched == sequential logits exactly.
+        """
+        dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
+
+        def _edge_row(row):
+            self.n_traces += 1          # runs at trace time only
+            return cnn_apply(dparams, dcfg, row[None], masks=dmasks,
+                             stop_layer=split)[0]
+
+        def _cloud_row(row):
+            self.n_traces += 1          # runs at trace time only
+            return cnn_apply(dparams, dcfg, row[None], masks=dmasks,
+                             start_layer=split)[0]
+
+        edge_fn = (jax.jit(lambda x: jax.lax.map(_edge_row, x))
+                   if split > 0 else None)
+        cloud_fn = (jax.jit(lambda x: jax.lax.map(_cloud_row,
+                                                  jnp.asarray(x)))
+                    if split < self.n_layers else None)
+        keep = (split_keep_indices(dcfg, dmasks, split)
+                if self.pack and not self.compact else None)
+        return edge_fn, cloud_fn, keep
+
+    def get(self, split: int, batch_bucket: Optional[int] = None):
         """(edge_fn, cloud_fn, keep) for ``split``; fns are None at the
         c=0 / c=N extremes. ``keep`` is the surviving-channel index set
         for the wire codec's packing — only set for masked-but-dense
         deployments (after compaction the dead channels are already gone
-        from the tensor)."""
+        from the tensor).
+
+        ``batch_bucket`` selects the *bucketed* compilation cache: the
+        returned pair is the row-mapped batched variant meant to be
+        called at exactly that (padded) leading-axis size — one compiled
+        executable per (split, bucket) shape, bit-identical per row to
+        the batch-1 pair. ``None`` keeps the historical batch-1 pair."""
         if not 0 <= split <= self.n_layers:
             raise ValueError(f"split {split} outside [0, {self.n_layers}]")
-        if split not in self._fns:
-            dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
-            edge_fn = (jax.jit(lambda x: cnn_apply(
-                dparams, dcfg, x, masks=dmasks, stop_layer=split))
-                if split > 0 else None)
-            cloud_fn = (jax.jit(lambda x: cnn_apply(
-                dparams, dcfg, jnp.asarray(x), masks=dmasks,
-                start_layer=split))
-                if split < self.n_layers else None)
-            keep = (split_keep_indices(dcfg, dmasks, split)
-                    if self.pack and not self.compact else None)
-            self._fns[split] = (edge_fn, cloud_fn, keep)
-        return self._fns[split]
+        if batch_bucket is None:
+            if split not in self._fns:
+                self._fns[split] = self._build(split)
+            return self._fns[split]
+        if batch_bucket < 1:
+            raise ValueError(f"batch_bucket must be >= 1, got {batch_bucket}")
+        if split not in self._batched_fns:
+            self._batched_fns[split] = self._build_batched(split)
+        return self._batched_fns[split]
 
     def warm(self, splits: Sequence[int], image: np.ndarray,
-             edge_only: bool = False) -> None:
+             edge_only: bool = False, buckets: Sequence[int] = (1,),
+             cloud_only: bool = False) -> None:
         """Pre-jit (trace + compile) the edge/cloud pair of each candidate
         split by pushing one sample through, so a mid-run switch does not
         stall the first request at the new partition. ``edge_only`` skips
         compiling the cloud halves (the edge peer of a socket deployment
-        never runs them)."""
+        never runs them).
+
+        ``buckets`` additionally warms the row-mapped batched pair at
+        each listed leading-axis size > 1 (splits x buckets), so a
+        dynamic-batching server's first burst — or its first burst after
+        a live RESPLIT — never stalls on tracing. ``cloud_only`` skips
+        the batched *edge* halves there (the batching server executes
+        only cloud sub-models; its batch-1 edge half still runs once to
+        derive the split-boundary feature shape)."""
         for c in splits:
             edge_fn, cloud_fn, _ = self.get(c)
-            x = jnp.asarray(image)
+            feat = jnp.asarray(image)        # split-boundary tensor at c
             if edge_fn is not None:
-                x = edge_fn(x)
+                feat = edge_fn(feat)
+                jax.block_until_ready(feat)
             if cloud_fn is not None and not edge_only:
-                x = cloud_fn(x)
-            jax.block_until_ready(x)
+                jax.block_until_ready(cloud_fn(feat))
+            for b in buckets:
+                if b <= 1:
+                    continue
+                edge_b, cloud_b, _ = self.get(c, batch_bucket=b)
+                if edge_b is not None and not cloud_only:
+                    tile = np.repeat(np.asarray(image), b, axis=0)
+                    jax.block_until_ready(edge_b(jnp.asarray(tile)))
+                if cloud_b is not None and not edge_only:
+                    fb = np.repeat(np.asarray(feat), b, axis=0)
+                    jax.block_until_ready(cloud_b(jnp.asarray(fb)))
 
 
 def _warm_input(cfg: CNNConfig) -> np.ndarray:
@@ -293,6 +383,88 @@ class CollabRunner:
         return {"logits": np.asarray(out), "timing": timing,
                 "wallclock": {"edge": t1 - t0, "cloud": t3 - t2}}
 
+    def infer_batch(self, images: Sequence[np.ndarray],
+                    bucket: Optional[int] = None) -> List[Dict]:
+        """Serve a batch of requests through ONE edge call and ONE cloud
+        call (the local fast path behind ``InferenceSession.infer_many``
+        on a plan with a ``batching`` section).
+
+        Results are **bit-identical per row** to batch-1 execution:
+        compute is the bank's row-mapped batched pair (the batch-1
+        computation mapped over rows, padded to ``bucket`` — next power
+        of two by default — to bound recompilation), so single-row
+        requests — the runtimes' standard granularity — match sequential
+        ``infer`` bitwise. (A multi-row request's rows are computed as
+        batch-1 rows; sequential ``infer`` of the same request would run
+        one fused batch-B conv, which XLA does not keep bit-stable
+        across batch shapes.) The wire step encodes/charges one frame
+        *per request* exactly as the sequential loop does (per-frame
+        int8 quantization scales and ``tx_bytes`` accounting are
+        unchanged; only the dispatches are amortized)."""
+        n = len(images)
+        if n == 0:
+            return []
+        arrs = [np.asarray(im) for im in images]
+        counts = [a.shape[0] for a in arrs]       # a request may be B rows
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        rows = int(offs[-1])
+        bucket = bucket or next_pow2_bucket(rows)
+        if bucket < rows:
+            raise ValueError(f"bucket {bucket} smaller than batch of "
+                             f"{rows} rows")
+        edge_b, cloud_b, _ = self._bank.get(self.split, batch_bucket=bucket)
+        xs = pad_rows(np.concatenate(arrs, axis=0), bucket)
+        t0 = time.perf_counter()
+        feats = jnp.asarray(xs)
+        if edge_b is not None:
+            feats = edge_b(feats)
+            jax.block_until_ready(feats)
+        t1 = time.perf_counter()
+        if self.channel.trace is not None:
+            self.channel.advance(self._analytic["T_D"] if
+                                 self.simulate_compute else t1 - t0)
+        feats_np = np.asarray(feats)
+        per_req: List[Tuple[int, float]] = []
+        if cloud_b is not None:
+            decoded_frames = []
+            for i in range(n):           # one frame per request, as infer()
+                frame = feats_np[offs[i]:offs[i] + counts[i]]
+                buf = self._encode(frame)
+                t_tx = self.channel.send(len(buf))
+                per_req.append((len(buf), t_tx))
+                decoded_frames.append(decode_any(buf)[0]
+                                      if (self.codec is not None
+                                          or self._keep is not None)
+                                      else frame)
+            decoded = pad_rows(np.concatenate(
+                [np.asarray(r) for r in decoded_frames], axis=0), bucket)
+            t2 = time.perf_counter()
+            out = cloud_b(jnp.asarray(decoded))
+            jax.block_until_ready(out)
+            t3 = time.perf_counter()
+        else:
+            per_req = [(0, 0.0)] * n
+            t2 = t3 = time.perf_counter()
+            out = feats
+        if self.channel.trace is not None:
+            self.channel.advance(self._analytic["T_S"] if
+                                 self.simulate_compute else t3 - t2)
+        out = np.asarray(out)
+        results = []
+        for i in range(n):
+            nbytes, t_tx = per_req[i]
+            if self.simulate_compute:
+                timing = RequestTiming(self._analytic["T_D"], t_tx,
+                                       self._analytic["T_S"], nbytes)
+            else:
+                timing = RequestTiming((t1 - t0) / n, t_tx,
+                                       (t3 - t2) / n, nbytes)
+            results.append({"logits": out[offs[i]:offs[i] + counts[i]],
+                            "timing": timing,
+                            "wallclock": {"edge": t1 - t0,
+                                          "cloud": t3 - t2}})
+        return results
+
 
 # ---------------------------------------------------------------------------
 # real-socket deployment (localhost stand-in for the paper's Wi-Fi pair)
@@ -306,7 +478,10 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 stop: Optional[threading.Event] = None,
                 plan_digest: Optional[str] = None,
                 resplit_candidates: Optional[Sequence[int]] = None,
-                trace: Optional[LinkTrace] = None) -> None:
+                trace: Optional[LinkTrace] = None,
+                batching: Optional[BatchingPolicy] = None,
+                batch_stats: Optional[Dict] = None,
+                simulate_server=None) -> None:
     """Cloud-side loop: accept edge connections, answer frames.
 
     A threaded accept loop serves each connection in its own handler
@@ -315,6 +490,14 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     loop drains and returns (default 1 — the paper's single-edge
     deployment and the historical behaviour); ``None`` accepts until the
     ``stop`` event is set. ``max_requests`` is a per-connection limit.
+
+    All connections draw tokens from ONE ``LinkShaper`` (one token bucket
+    per server): N concurrent edges contend for the server's modeled
+    transmit path (the logits downlink) instead of each connection
+    getting a private copy of it. Uplink pacing stays per-edge — each
+    edge device shapes its own sends with its own radio's bucket; what
+    this fixes is the server side multiplying ITS link by the number of
+    connections.
 
     Frames are decoded via ``decode_any``: the edge negotiates the codec
     per frame through the frame header (raw fp32, fp16, int8, packed), so
@@ -335,18 +518,101 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     restricts which splits are accepted (the plan's adaptive section);
     ``None`` accepts any split valid for the deployed network.
     ``trace`` makes the shaper's rate follow a time-varying link.
+
+    ``batching`` arms the cross-client dynamic batching engine
+    (``repro.core.collab.batching``): handlers submit decoded feature
+    tensors to per-lane queues instead of running ``cloud_fn`` per frame,
+    a per-connection writer thread ships responses back in order while
+    the handler keeps reading (so one pipelining edge can fill a batch by
+    itself), and ONE bucketed jitted cloud call serves each fused batch —
+    with logits bit-identical per row to batch-1 execution (i.e. the
+    unbatched path, for the standard single-row frames; a multi-row
+    frame's rows are computed as batch-1 rows, not one fused conv, and a
+    frame wider than ``max_batch`` bypasses the engine). ``batch_stats``
+    (a dict) receives the engine's per-lane accounting when the server
+    shuts down.
+
+    ``simulate_server`` (a ``ComputeProfile``) charges every cloud
+    invocation the analytic ``batched_server_time`` on that hardware,
+    serialized server-wide — the modeled accelerator executes one batch
+    at a time, like ``CollabRunner``'s ``simulate_compute`` this
+    container stands in for. Colocated benchmarks use it to measure the
+    batching engine against the paper's 3090 rather than against this
+    host's core count (on which N real batch-1 calls may parallelize in
+    ways the target device cannot). Real compute still runs first, so
+    logits and bit-identity are unaffected.
     """
     bank = SplitFnBank(params, cfg, masks, compact)
-    if resplit_candidates:
-        # pre-jit every candidate pair so a live RESPLIT doesn't stall its
-        # first request on compilation (the edge blocks on recv meanwhile)
-        bank.warm(resplit_candidates, _warm_input(cfg))
+    charge = None
+    if simulate_server is not None:
+        from repro.core.partition.latency_model import (
+            batched_server_time, cnn_layer_costs, compacted_cnn_layer_costs)
+        sim_costs = (compacted_cnn_layer_costs(cfg, masks)
+                     if compact else cnn_layer_costs(cfg, masks))
+        device_lock = threading.Lock()
+
+        def charge(c: int, rows: int) -> None:
+            dt = batched_server_time(sim_costs, c, simulate_server, rows)
+            with device_lock:            # one modeled accelerator
+                time.sleep(dt)
+
+    engine = (DynamicBatcher(bank, batching, invoke_cost=charge)
+              if batching else None)
+    warm_splits = list(resplit_candidates or ())
+    if batching and split not in warm_splits:
+        warm_splits.append(split)
+    if warm_splits:
+        # pre-jit every (candidate split x batch bucket) pair so a live
+        # RESPLIT or the first concurrent burst doesn't stall its first
+        # request on compilation (the edge blocks on recv meanwhile)
+        bank.warm(warm_splits, _warm_input(cfg),
+                  buckets=batching.resolved_buckets if batching else (1,),
+                  cloud_only=True)
+    shaper = LinkShaper(link, trace=trace) if link or trace else None
 
     def _handle(conn: socket.socket, rec: Dict) -> None:
-        ch = ShapedSocket(conn, link, trace=trace) if link or trace else None
+        ch = (ShapedSocket(conn, link, trace=trace, shaper=shaper)
+              if shaper is not None else None)
         rx, tx = _frame_io(conn, ch)
-        _, cloud_fn, _ = bank.get(split)
+        cur_split = split
+        _, cloud_fn, _ = bank.get(cur_split)
         served = 0
+        # -- in-order response pipeline (batching mode) ---------------------
+        # The handler thread keeps reading frames and submitting them to
+        # the batcher; this writer drains (future | bytes) items in
+        # arrival order, so responses never reorder even though batches
+        # complete asynchronously. Control-frame replies enter the same
+        # queue as raw bytes to preserve ordering.
+        resp_q: Optional[queue.Queue] = queue.Queue() if engine else None
+
+        def _writer() -> None:
+            try:
+                while True:
+                    item = resp_q.get()
+                    if item is None:
+                        return
+                    if isinstance(item, bytes):
+                        tx(struct.pack("<Q", len(item)) + item)
+                        continue
+                    out = encode_tensor(np.asarray(item.result()))
+                    tx(struct.pack("<Q", len(out)) + out)
+            except Exception:                            # noqa: BLE001
+                try:
+                    conn.shutdown(socket.SHUT_RDWR)      # unblock reader
+                except OSError:
+                    pass
+
+        writer = None
+        if engine is not None:
+            writer = threading.Thread(target=_writer, daemon=True)
+            writer.start()
+
+        def _respond(payload: bytes) -> None:
+            if resp_q is not None:
+                resp_q.put(payload)
+            else:
+                tx(struct.pack("<Q", len(payload)) + payload)
+
         try:
             while max_requests is None or served < max_requests:
                 (n,) = struct.unpack("<Q", rx(8))
@@ -355,9 +621,8 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     peer, _, pver = decode_hello(buf)
                     ok = (pver == PROTOCOL_VERSION
                           and (plan_digest is None or peer == plan_digest))
-                    out = encode_hello(plan_digest or "",
-                                       status=0 if ok else 1)
-                    tx(struct.pack("<Q", len(out)) + out)
+                    _respond(encode_hello(plan_digest or "",
+                                          status=0 if ok else 1))
                     if not ok:
                         return              # contract mismatch: fail fast
                     rec["claimed"] = True   # handshake is not a request
@@ -369,21 +634,35 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                           and (resplit_candidates is None
                                or want in resplit_candidates))
                     if ok:
+                        cur_split = want
                         _, cloud_fn, _ = bank.get(want)
-                    out = encode_resplit(want, status=0 if ok else 1)
-                    tx(struct.pack("<Q", len(out)) + out)
+                    _respond(encode_resplit(want, status=0 if ok else 1))
                     rec["claimed"] = True   # control frame, not a request
                     continue
                 arr, _ = decode_any(buf)
-                logits = np.asarray(cloud_fn(arr) if cloud_fn is not None
-                                    else arr)  # c=N: edge sent the logits
-                out = encode_tensor(logits)
-                tx(struct.pack("<Q", len(out)) + out)
+                rows = int(np.asarray(arr).shape[0]) if arr.ndim else 1
+                if (engine is not None and cur_split < bank.n_layers
+                        and rows <= batching.max_batch):
+                    resp_q.put(engine.submit(cur_split, frame_lane(buf),
+                                             np.asarray(arr)))
+                else:
+                    # no engine, c=N passthrough, or a frame wider than
+                    # any bucket — serve it exactly like the unbatched
+                    # server would (batch-1 fns accept any leading dim)
+                    logits = np.asarray(
+                        cloud_fn(arr) if cloud_fn is not None
+                        else arr)  # c=N: edge sent the logits
+                    if charge is not None and cloud_fn is not None:
+                        charge(cur_split, rows)
+                    _respond(encode_tensor(logits))
                 served += 1
                 rec["claimed"] = True
         except (EOFError, OSError):
             pass
         finally:
+            if writer is not None:
+                resp_q.put(None)
+                writer.join(timeout=30)
             conn.close()
 
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -438,6 +717,10 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     pass
         for w, _, _ in pending:
             w.join(timeout=10)
+        if engine is not None:
+            engine.stop()
+            if batch_stats is not None:
+                batch_stats.update(engine.stats())
 
 
 class EdgeClient:

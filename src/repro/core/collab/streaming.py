@@ -42,7 +42,8 @@ import numpy as np
 from repro.configs.base import CNNConfig
 from repro.core.collab.channel import SimChannel
 from repro.core.collab.protocol import decode_any, encode_feature
-from repro.core.collab.runtime import build_split_fns
+from repro.core.collab.batching import next_pow2_bucket, pad_rows
+from repro.core.collab.runtime import SplitFnBank
 from repro.core.partition.profiles import TwoTierProfile
 
 _DONE = object()
@@ -92,9 +93,22 @@ class StreamingCollabRunner:
         self.channel = SimChannel(profile.link, realtime=realtime_channel,
                                   trace=trace)
         self.codec = codec
-        (self._edge_fn, self._cloud_fn, self._keep,
-         self.deploy_cfg) = build_split_fns(params, cfg, split, masks,
-                                            compact, pack)
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+        self._edge_fn, self._cloud_fn, self._keep = self._bank.get(split)
+        self.deploy_cfg = self._bank.deploy_cfg
+
+    def _run_rows(self, fn_single, x, role: int):
+        """Run ``x`` (B rows) through the batch-1 fn (B == 1) or the
+        bank's row-mapped bucketed variant (B > 1, zero-padded to the
+        power-of-two bucket, padding sliced off) — per-row results are
+        bit-identical either way."""
+        n = int(x.shape[0])
+        if n == 1:
+            return fn_single(x)
+        bucket = next_pow2_bucket(n)
+        xs = pad_rows(np.asarray(x), bucket)
+        fn_b = self._bank.get(self.split, batch_bucket=bucket)[role]
+        return fn_b(jnp.asarray(xs))[:n]
 
     # -- stages -------------------------------------------------------------
     def _edge_stage(self, in_q: queue.Queue, tx_q: queue.Queue,
@@ -118,7 +132,7 @@ class StreamingCollabRunner:
             t0 = time.perf_counter()
             x = jnp.asarray(np.concatenate(imgs, axis=0))
             if self._edge_fn is not None:
-                x = self._edge_fn(x)
+                x = self._run_rows(self._edge_fn, x, role=0)
                 jax.block_until_ready(x)
             if self._cloud_fn is not None:
                 buf = encode_feature(np.asarray(x),
@@ -153,7 +167,7 @@ class StreamingCollabRunner:
             t0 = time.perf_counter()
             if self._cloud_fn is not None:
                 x = jnp.asarray(decode_any(buf)[0])
-                out = np.asarray(self._cloud_fn(x))
+                out = np.asarray(self._run_rows(self._cloud_fn, x, role=1))
                 nbytes = len(buf)
             else:
                 out, nbytes = np.asarray(buf), 0

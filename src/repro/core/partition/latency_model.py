@@ -237,6 +237,41 @@ def wire_tx_scale(cfg: CNNConfig, masks, split: int,
 
 
 # ---------------------------------------------------------------------------
+# batched server time (what dynamic batching amortizes)
+# ---------------------------------------------------------------------------
+def _segment_time(costs: Sequence[LayerCost], idx, comp,
+                  batch: int = 1) -> float:
+    """Analytic time for layers ``idx`` on ``comp`` (a ComputeProfile):
+    per-layer roofline (flops vs activation traffic) scaled by the batch
+    plus the per-invocation overhead, paid once per layer per CALL. The
+    single source of the formula — ``split_latency`` and
+    ``batched_server_time`` must never drift apart."""
+    t = 0.0
+    for i in idx:
+        work = max(batch * costs[i].flops / comp.flops_per_s,
+                   2 * batch * costs[i].out_bytes / comp.mem_bw)
+        t += work + comp.overhead_s
+    return t
+
+
+def batched_server_time(costs: Sequence[LayerCost], c: int,
+                        server, batch: int) -> float:
+    """Analytic T_S for ONE cloud invocation serving ``batch`` fused
+    requests on ``server`` (a ``ComputeProfile``): per-layer FLOPs and
+    activation traffic scale with the batch, but the per-invocation
+    constant (``ComputeProfile.overhead_s`` — kernel launch, dispatch,
+    framework overhead) is paid once per *batch* instead of once per
+    *request*. The gap between ``batch * batched_server_time(..., 1)``
+    and ``batched_server_time(..., batch)`` is exactly the throughput
+    headroom the cross-client dynamic batching engine recovers; per
+    request it approaches ``overhead_s``-free compute as the batching
+    window fills."""
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    return _segment_time(costs, range(c, len(costs)), server, batch)
+
+
+# ---------------------------------------------------------------------------
 # Eq. 5: the latency of a split
 # ---------------------------------------------------------------------------
 def split_latency(costs: Sequence[LayerCost], c: int,
@@ -270,12 +305,7 @@ def split_latency(costs: Sequence[LayerCost], c: int,
     def seg_time(idx, comp, measured):
         if measured is not None:
             return sum(measured[i] for i in idx)
-        t = 0.0
-        for i in idx:
-            work = max(costs[i].flops / comp.flops_per_s,
-                       2 * costs[i].out_bytes / comp.mem_bw)
-            t += work + comp.overhead_s
-        return t
+        return _segment_time(costs, idx, comp)
 
     t_d = seg_time(range(c), profile.device, measured_device_s)
     t_s = seg_time(range(c, n), profile.server, measured_server_s)

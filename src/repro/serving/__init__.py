@@ -23,6 +23,7 @@ the plan and return the same result shape.
 from repro.core.collab.adaptive import (AdaptivePolicy,
                                         AdaptiveSplitController,
                                         BandwidthEstimator, SplitSwitch)
+from repro.core.collab.batching import BatchingPolicy, LaneStats
 from repro.core.collab.protocol import PlanMismatchError
 from repro.core.partition.profiles import TRACES, LinkTrace, TraceSegment
 from repro.serving.plan import PLAN_VERSION, DeploymentPlan
@@ -36,4 +37,5 @@ __all__ = [
     "PlanMismatchError", "connect", "serve",
     "AdaptivePolicy", "AdaptiveSplitController", "BandwidthEstimator",
     "SplitSwitch", "LinkTrace", "TraceSegment", "TRACES",
+    "BatchingPolicy", "LaneStats",
 ]

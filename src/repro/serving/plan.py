@@ -37,6 +37,20 @@ be willing to serve any split the edge may announce. Plans without an
 environment/simulation knob, not part of the contract: pass them to the
 session/server (``connect(plan, trace=...)``), not the plan.
 
+**Batched plans**: setting ``batching=BatchingPolicy(...)`` arms the
+cloud peer's cross-client dynamic batching engine
+(``repro.core.collab.batching``): connection handlers submit decoded
+feature tensors to per-lane queues (keyed by split x wire encoding),
+a scheduler fuses concurrent requests within ``max_wait_ms`` up to
+``max_batch`` rows, pads to power-of-two bucket shapes to bound
+recompilation, and answers each fused batch with ONE jitted cloud call —
+logits bit-identical to sequential serving. Like ``adaptive``, the
+``batching`` section is folded into the digest **only when set** (plans
+without one keep their pre-batching digests): the bucket/warm set and
+the server's in-order response pipelining are deployment-contract-level
+behaviour both peers arm for (the edge's pipelined ``infer_many``
+assumes a server that reads ahead while batches are in flight).
+
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
 from __future__ import annotations
@@ -54,6 +68,7 @@ import numpy as np
 from repro.checkpoint import store
 from repro.configs.base import CNNConfig, ConvLayerSpec
 from repro.core.collab.adaptive import AdaptivePolicy
+from repro.core.collab.batching import BatchingPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
@@ -116,6 +131,7 @@ class DeploymentPlan:
     connect_timeout_s: float = 30.0
     shape_link: bool = True
     adaptive: Optional[AdaptivePolicy] = None
+    batching: Optional[BatchingPolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -193,7 +209,10 @@ class DeploymentPlan:
         The adaptive section is part of the contract (the cloud must be
         willing to serve any candidate split the edge may RESPLIT to),
         but the key is only present when set, so pre-adaptive plans keep
-        their digests."""
+        their digests. The batching section follows the same rule: only
+        present when set (pre-batching digests stable), and folded in
+        because the bucket/warm set and the server's pipelined in-order
+        response behaviour are part of what the peers arm for."""
         masks = None
         if self.masks:
             masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
@@ -204,6 +223,8 @@ class DeploymentPlan:
                "pack": self.pack}
         if self.adaptive is not None:
             doc["adaptive"] = self.adaptive.to_json()
+        if self.batching is not None:
+            doc["batching"] = self.batching.to_json()
         return doc
 
     @property
@@ -232,6 +253,8 @@ class DeploymentPlan:
                         "shape_link": self.shape_link},
                "adaptive": (self.adaptive.to_json()
                             if self.adaptive else None),
+               "batching": (self.batching.to_json()
+                            if self.batching else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -254,6 +277,8 @@ class DeploymentPlan:
         link = doc["link"]
         adaptive = (AdaptivePolicy.from_json(doc["adaptive"])
                     if doc.get("adaptive") else None)
+        batching = (BatchingPolicy.from_json(doc["batching"])
+                    if doc.get("batching") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -261,7 +286,7 @@ class DeploymentPlan:
                    host=link["host"], port=link["port"],
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
-                   version=doc["version"])
+                   batching=batching, version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -276,9 +301,12 @@ class DeploymentPlan:
                  else "dense")
         adapt = (f", adaptive over {list(self.adaptive.candidates)}"
                  if self.adaptive else "")
+        batch = (f", batched<= {self.batching.max_batch}"
+                 f"@{self.batching.max_wait_ms}ms"
+                 if self.batching else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name}){adapt}")
+                f"({self.profile.link.name}){adapt}{batch}")

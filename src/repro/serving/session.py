@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.collab.adaptive import (AdaptiveSplitController,
                                         SplitSwitch)
+from repro.core.collab.batching import bucket_for
 from repro.core.collab.protocol import PlanMismatchError  # re-export  # noqa: F401
 from repro.core.collab.runtime import (CollabRunner, EdgeClient,
                                        serve_cloud)
@@ -139,6 +140,46 @@ class LocalSession(InferenceSession):
                 self.switches.append(sw)
         return _result(res["logits"], t.t_device, t.t_tx + t.t_server,
                        t.tx_bytes)
+
+    def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
+        """Batched fast path when the plan carries a ``batching`` section
+        (and no adaptive controller needs per-request observations):
+        requests are fused up to ``max_batch`` ROWS at a time through ONE
+        edge call and ONE bucketed cloud call
+        (``CollabRunner.infer_batch``), with logits bit-identical to the
+        sequential loop. A single request wider than ``max_batch`` rows
+        falls back to the sequential path (which accepts any batch)."""
+        if self.plan.batching is None or self._controller is not None:
+            return super().infer_many(images)
+        mb = self.plan.batching.max_batch
+        buckets = self.plan.batching.resolved_buckets
+        out: List[Dict] = []
+        chunk: List[np.ndarray] = []
+        chunk_rows = 0
+
+        def flush():
+            nonlocal chunk, chunk_rows
+            for r in self._runner.infer_batch(
+                    chunk, bucket=bucket_for(chunk_rows, buckets)):
+                t = r["timing"]
+                out.append(_result(r["logits"], t.t_device,
+                                   t.t_tx + t.t_server, t.tx_bytes))
+            chunk, chunk_rows = [], 0
+
+        for img in images:
+            rows = int(np.asarray(img).shape[0])
+            if rows > mb:                # wider than any bucket
+                if chunk:
+                    flush()
+                out.append(self.infer(img))
+                continue
+            if chunk_rows + rows > mb:
+                flush()
+            chunk.append(img)
+            chunk_rows += rows
+        if chunk:
+            flush()
+        return out
 
 
 class SocketSession(InferenceSession):
@@ -262,13 +303,22 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
           ready: Optional[threading.Event] = None,
           stop: Optional[threading.Event] = None,
           verify: bool = True,
-          trace: Optional[LinkTrace] = None) -> None:
+          trace: Optional[LinkTrace] = None,
+          batch_stats: Optional[Dict] = None,
+          simulate_server=None) -> None:
     """Cloud-side entry point: serve ``plan`` on its link endpoint
     (blocking). ``max_clients=None`` + a ``stop`` event serves many edges
     until told to quit; ``verify`` arms the HELLO digest check. An
     adaptive plan arms the RESPLIT path, restricted to the plan's
     candidate splits; a non-adaptive plan still answers RESPLIT for any
-    split valid on the deployed network (manual ``resplit``)."""
+    split valid on the deployed network (manual ``resplit``). A plan with
+    a ``batching`` section serves through the cross-client dynamic
+    batching engine; pass a dict as ``batch_stats`` to receive its
+    per-lane accounting (fill rate, padding waste) on shutdown.
+    ``simulate_server`` (a ``ComputeProfile``) additionally charges each
+    cloud invocation its analytic device time on that hardware,
+    serialized server-wide (see ``serve_cloud``) — the benchmark knob for
+    measuring the engine against the paper's 3090 on this container."""
     serve_cloud(plan.params, plan.cfg, plan.split, port or plan.port,
                 masks=plan.masks,
                 link=plan.profile.link if plan.shape_link else None,
@@ -278,7 +328,8 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
                 plan_digest=plan.digest if verify else None,
                 resplit_candidates=(plan.adaptive.candidates
                                     if plan.adaptive else None),
-                trace=trace)
+                trace=trace, batching=plan.batching,
+                batch_stats=batch_stats, simulate_server=simulate_server)
 
 
 class CloudServer:
@@ -293,15 +344,21 @@ class CloudServer:
                  max_requests: Optional[int] = None,
                  max_clients: Optional[int] = None, verify: bool = True,
                  start_timeout: float = 10.0,
-                 trace: Optional[LinkTrace] = None):
+                 trace: Optional[LinkTrace] = None,
+                 simulate_server=None):
         self.plan = plan
+        #: per-lane dynamic-batching accounting (filled on shutdown when
+        #: the plan carries a ``batching`` section)
+        self.batch_stats: Dict = {}
         self._stop = threading.Event()
         ready = threading.Event()
         self._thread = threading.Thread(
             target=serve, args=(plan,),
             kwargs=dict(port=port, host=host, max_requests=max_requests,
                         max_clients=max_clients, ready=ready,
-                        stop=self._stop, verify=verify, trace=trace),
+                        stop=self._stop, verify=verify, trace=trace,
+                        batch_stats=self.batch_stats,
+                        simulate_server=simulate_server),
             daemon=True)
         self._thread.start()
         if not ready.wait(start_timeout):

@@ -125,6 +125,7 @@ def test_transformer_costs_all_archs():
 
 
 def test_profiles_registry():
-    assert set(PROFILES) == {"paper", "tpu_two_pod", "tpu_edge_cloud"}
+    assert set(PROFILES) == {"paper", "paper_farm", "tpu_two_pod",
+                             "tpu_edge_cloud"}
     p = PROFILES["paper"]
     assert p.link.bandwidth == 50e6 / 8          # 50 Mbps
