@@ -37,14 +37,11 @@ import numpy as np
 
 from benchmarks.common import save_result, table
 from repro import serving
-from repro.core.partition.profiles import (ComputeProfile, LinkTrace,
+from repro.core.partition.profiles import (LinkTrace, MCU_EDGE,
                                            PAPER_PROFILE, TwoTierProfile)
 from repro.core.pruning.masks import cnn_masks_from_ratios
 from repro.models.cnn import (cnn_apply, init_cnn_params, prunable_layers,
                               tiny_cnn_config)
-
-MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
-                          mem_bw=0.5e9, overhead_s=3e-4)
 #: Wi-Fi walking out of range: 50 -> 20 -> 2 Mbps over the run
 DEGRADE_TRACE = LinkTrace.from_mbps(
     "bench_wifi_degrade",

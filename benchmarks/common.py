@@ -51,6 +51,34 @@ def write_collab_record(cloud_batching: Dict,
     return save_result("BENCH_collab", rec)
 
 
+def write_energy_record(energy_split: Dict) -> str:
+    """The tracked energy-aware-serving perf record,
+    ``BENCH_energy.json``: one flat summary distilled from the
+    energy_split benchmark — how often the weighted objective flips the
+    split, the measured joules saving of the flip demo, and the battery
+    replay's switch trajectory. Written by ``benchmarks.energy_split``
+    run with ``--json``/``--smoke`` (the CI path) or by
+    ``benchmarks.run --json``; CI uploads it as an artifact next to
+    ``BENCH_collab.json``."""
+    flip, battery = energy_split["flip_demo"], energy_split["battery_demo"]
+    rec = {
+        "n_flips": energy_split["n_flips"],
+        "n_pairs": energy_split["n_pairs"],
+        "latency_split": flip["latency_split"],
+        "energy_split": flip["energy_split"],
+        "energy_saving_frac": flip["energy_saving"],
+        "latency_total_s": flip["latency_total"]["T_s"],
+        "latency_total_j": flip["latency_total"]["E_j"],
+        "energy_total_s": flip["energy_total"]["T_s"],
+        "energy_total_j": flip["energy_total"]["E_j"],
+        "bit_identical": flip["bit_identical"],
+        "battery_switches": len(battery["switches"]),
+        "battery_start_split": battery["start_split"],
+        "battery_end_split": battery["end_split"],
+    }
+    return save_result("BENCH_energy", rec)
+
+
 def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
     widths = {c: max([len(c)] + [len(_fmt(r.get(c))) for r in rows])
               for c in cols}

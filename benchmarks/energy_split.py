@@ -1,0 +1,265 @@
+"""Energy-aware split optimization vs the latency-only sweep (BENCH).
+
+The paper motivates collaborative inference with *both* latency and the
+"high energy consumption" of resource-limited embedded devices, but its
+Eq. 5 objective prices latency only. This benchmark prices every
+candidate split into a ``(T_total, E_edge)`` pair
+(``repro.core.partition.energy_model``) and shows three things:
+
+  1. **Pareto section** — for each (device power class x canned link
+     trace) pair, the latency/energy Pareto front over all splits: the
+     latency optimum and the joules optimum are different operating
+     points, and the front between them is the menu.
+  2. **Objective flip (acceptance)** — on at least one (profile, trace)
+     pair the weighted latency·energy objective picks a *different*
+     split than the latency-only sweep; both plans are then actually
+     served over the trace and their logits are **bit-identical**
+     (fp32 codec: moving the partition never changes the math) while
+     the energy-aware plan measurably spends fewer joules per request.
+  3. **Battery replay** — an adaptive plan with a ``battery_j`` budget
+     re-splits itself toward the low-energy end of the front as the
+     budget drains (MCU class: the radio is the expensive part, so a
+     dying battery stops transmitting and computes locally).
+
+``--smoke`` runs the CI-sized version; the tracked perf record
+``experiments/bench/BENCH_energy.json`` is written by ``--json`` (or by
+``benchmarks.run --json``), next to ``BENCH_collab.json``.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table, write_energy_record
+from repro import serving
+from repro.core.partition.energy_model import (ENERGY_PROFILES, EnergyPolicy,
+                                               pareto_front)
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                compacted_cnn_layer_costs,
+                                                wire_tx_scale)
+from repro.core.partition.profiles import (LinkProfile, LinkTrace, MCU_EDGE,
+                                           PAPER_PROFILE, PI_EDGE, TRACES,
+                                           TwoTierProfile)
+from repro.core.partition.splitter import sweep_splits
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import init_cnn_params, prunable_layers, tiny_cnn_config
+
+#: device classes under study: (compute profile, energy profile name,
+#: static energy weight s/J for the flip demo)
+DEVICES = {
+    "mcu": (MCU_EDGE, "mcu", 0.5),
+    "pi": (PI_EDGE, "pi", 2.0),
+}
+#: steady bench link for the deterministic serving/battery demos (1 ms
+#: RTT — the regime where offloading is latency-competitive, so the
+#: joules are what tips the decision)
+STEADY_50 = LinkTrace.from_mbps("bench_wifi_50", [(float("inf"), 50.0)],
+                                rtt_ms=1.0)
+CANDIDATES = (0, 3, 6, 13)
+
+
+def _setup():
+    cfg = tiny_cnn_config(num_classes=38, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(params, cfg,
+                                  {i: 0.5 for i in prunable_layers(cfg)})
+    return cfg, params, masks
+
+
+def _sweep(cfg, masks, device, energy, link: LinkProfile):
+    """The energy-priced Eq. 5 sweep on the deployed (compacted) shapes."""
+    costs = compacted_cnn_layer_costs(cfg, masks)
+    prof = TwoTierProfile(device, PAPER_PROFILE.server, link)
+    return sweep_splits(
+        costs, prof, cnn_input_bytes(cfg), energy=energy,
+        tx_scale=lambda c: wire_tx_scale(cfg, masks, c, codec="fp32",
+                                         compact=True))
+
+
+def pareto_section(cfg, masks, traces: Dict[str, LinkTrace]) -> List[Dict]:
+    """Latency/energy Pareto fronts per (device, trace at t=0); returns
+    the rows of the tracked record, including the flip scan."""
+    rows = []
+    for dev_name, (device, en_name, weight) in DEVICES.items():
+        energy = ENERGY_PROFILES[en_name]
+        policy = EnergyPolicy(profile=energy, energy_weight_s_per_j=weight)
+        for tr_name, trace in traces.items():
+            tab = _sweep(cfg, masks, device, energy, trace.link_at(0.0))
+            t_best = min(tab, key=lambda r: r["T"])
+            e_best = min(tab, key=lambda r: r["E_edge"])
+            w_best = min(tab, key=policy.score)
+            front = pareto_front(tab)
+            rows.append({
+                "device": dev_name, "trace": tr_name,
+                "weight_s_per_j": weight,
+                "latency_split": int(t_best["split"]),
+                "energy_split": int(e_best["split"]),
+                "weighted_split": int(w_best["split"]),
+                "flip": int(w_best["split"]) != int(t_best["split"]),
+                "T_latency_ms": t_best["T"] * 1e3,
+                "E_latency_mj": t_best["E_edge"] * 1e3,
+                "T_weighted_ms": w_best["T"] * 1e3,
+                "E_weighted_mj": w_best["E_edge"] * 1e3,
+                "front": [{"split": int(r["split"]), "T_ms": r["T"] * 1e3,
+                           "E_mj": r["E_edge"] * 1e3} for r in front],
+            })
+    print(table(
+        rows, ["device", "trace", "latency_split", "weighted_split",
+               "energy_split", "T_latency_ms", "E_latency_mj",
+               "T_weighted_ms", "E_weighted_mj"],
+        "latency-only vs energy-aware split per (device, trace @ t=0)"))
+    for r in rows:
+        front = " -> ".join(f"c={p['split']} ({p['T_ms']:.2f}ms,"
+                            f"{p['E_mj']:.2f}mJ)" for p in r["front"])
+        print(f"   {r['device']}/{r['trace']} Pareto: {front}")
+    return rows
+
+
+def serve_flip(cfg, params, masks, n_requests: int) -> Dict:
+    """Acceptance: the energy-aware objective picks a different split
+    than the latency sweep on (MCU, steady 50 Mbps), both plans serve
+    bit-identical logits, and the energy-aware plan spends fewer joules.
+    """
+    device, en_name, weight = DEVICES["mcu"]
+    policy = EnergyPolicy(profile=ENERGY_PROFILES[en_name],
+                          energy_weight_s_per_j=weight)
+    profile = TwoTierProfile(device, PAPER_PROFILE.server,
+                             STEADY_50.link_at(0.0))
+    common = dict(masks=masks, compact=True, codec="fp32",
+                  profile=profile, shape_link=False)
+    plan_t = serving.DeploymentPlan.from_args(params, cfg, None, **common)
+    plan_e = serving.DeploymentPlan.from_args(params, cfg, None,
+                                              energy=policy, **common)
+    # meter the latency plan too (same power model, same split choice as
+    # a pure-latency deployment: the weight only changes the *pick*, so
+    # pin its split explicitly to keep the latency-only choice)
+    plan_t = serving.DeploymentPlan.from_args(params, cfg, plan_t.split,
+                                              energy=EnergyPolicy(
+                                                  profile=policy.profile),
+                                              **common)
+    assert plan_e.split != plan_t.split, (
+        "energy-aware objective picked the latency split "
+        f"(both c={plan_e.split}); no flip to demonstrate")
+    print(f"latency-only pick: c={plan_t.split}; energy-aware "
+          f"(w={weight} s/J): c={plan_e.split}")
+
+    rng = np.random.RandomState(0)
+    imgs = [rng.rand(1, 32, 32, 3).astype(np.float32)
+            for _ in range(n_requests)]
+    totals = {}
+    logits = {}
+    for name, plan in (("latency", plan_t), ("energy", plan_e)):
+        sess = serving.connect(plan, backend="local", trace=STEADY_50)
+        t_sum = e_sum = 0.0
+        outs = []
+        for img in imgs:
+            res = sess.infer(img)
+            t_sum += res["t_total"]
+            e_sum += res["e_edge_j"]
+            outs.append(res["logits"])
+        totals[name] = {"T_s": t_sum, "E_j": e_sum}
+        logits[name] = outs
+    for a, b in zip(logits["latency"], logits["energy"]):
+        np.testing.assert_array_equal(a, b)     # fp32: split never
+        #                                         changes the math
+    print(table(
+        [{"objective": k, "split": p.split, "total_ms": v["T_s"] * 1e3,
+          "total_mj": v["E_j"] * 1e3,
+          "mj_per_req": v["E_j"] * 1e3 / n_requests}
+         for (k, v), p in zip(totals.items(), (plan_t, plan_e))],
+        ["objective", "split", "total_ms", "total_mj", "mj_per_req"],
+        f"{n_requests} requests, MCU edge @ steady 50 Mbps"))
+    assert totals["energy"]["E_j"] < totals["latency"]["E_j"], (
+        "energy-aware split did not reduce measured joules", totals)
+    return {"latency_split": plan_t.split, "energy_split": plan_e.split,
+            "latency_total": totals["latency"],
+            "energy_total": totals["energy"],
+            "energy_saving": 1.0 - (totals["energy"]["E_j"]
+                                    / totals["latency"]["E_j"]),
+            "bit_identical": True}
+
+
+def battery_replay(cfg, params, masks, n_requests: int) -> Dict:
+    """An MCU edge with a draining battery: starts at the latency
+    optimum (offload) and re-splits toward all-edge as the budget runs
+    down — the radio is the expensive peripheral, so a dying device
+    stops transmitting."""
+    device, en_name, _ = DEVICES["mcu"]
+    policy = EnergyPolicy(profile=ENERGY_PROFILES[en_name],
+                          energy_weight_s_per_j=0.1, battery_j=0.1)
+    profile = TwoTierProfile(device, PAPER_PROFILE.server,
+                             STEADY_50.link_at(0.0))
+    plan = serving.DeploymentPlan.from_args(
+        params, cfg, None, masks=masks, compact=True, codec="fp32",
+        profile=profile, shape_link=False, energy=policy,
+        adaptive=serving.AdaptivePolicy(candidates=CANDIDATES,
+                                        ewma_alpha=0.5, min_samples=2,
+                                        hysteresis=0.02, dwell=2))
+    print(plan.describe())
+    rng = np.random.RandomState(1)
+    sess = serving.connect(plan, backend="local", trace=STEADY_50)
+    splits = []
+    for _ in range(n_requests):
+        sess.infer(rng.rand(1, 32, 32, 3).astype(np.float32))
+        splits.append(sess.split)
+    for sw in sess.switches:
+        print("  " + sw.describe())
+    ctl = sess._controller
+    print(f"   battery after {n_requests} requests: "
+          f"{ctl.battery_j:.4f} J of {policy.battery_j} J")
+    assert sess.switches, "battery drain never re-split the deployment"
+    # every switch under drain moves to a lower-predicted-energy split,
+    # and the first one fires while meaningful budget remains (the
+    # urgency curve must act BEFORE exhaustion, not at it)
+    for sw in sess.switches:
+        assert sw.predicted_E < sw.current_E, sw.describe()
+    assert sess.switches[0].battery_j > 0.1 * policy.battery_j, (
+        "first battery-driven switch only happened at exhaustion",
+        sess.switches[0].describe())
+    return {"start_split": int(splits[0]), "end_split": int(splits[-1]),
+            "battery_j": policy.battery_j,
+            "battery_left_j": float(ctl.battery_j),
+            "switches": [{"request": sw.request_index,
+                          "from": sw.old_split, "to": sw.new_split,
+                          "battery_j": sw.battery_j}
+                         for sw in sess.switches]}
+
+
+def run(fast: bool = False) -> dict:
+    cfg, params, masks = _setup()
+    traces = dict(TRACES)
+    if fast:
+        traces = {k: traces[k] for k in ("wifi_steady", "wifi_degrading")}
+    traces["bench_wifi_50"] = STEADY_50
+
+    rows = pareto_section(cfg, masks, traces)
+    flips = [r for r in rows if r["flip"]]
+    assert flips, ("energy-aware objective never picked a different split "
+                   "than the latency sweep on any (device, trace) pair")
+    print(f"objective flips on {len(flips)}/{len(rows)} (device, trace) "
+          f"pairs")
+
+    n = 24 if fast else 64
+    flip = serve_flip(cfg, params, masks, n)
+    battery = battery_replay(cfg, params, masks, 48 if fast else 96)
+
+    out = {"pairs": rows, "n_flips": len(flips), "n_pairs": len(rows),
+           "flip_demo": flip, "battery_demo": battery}
+    save_result("energy_split", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer traces and requests)")
+    ap.add_argument("--json", action="store_true",
+                    help="write the tracked BENCH_energy.json perf record")
+    args = ap.parse_args()
+    res = run(fast=args.smoke)
+    if args.json or args.smoke:
+        # the CI smoke path owns the tracked record, like cloud_batching
+        print(f"perf record: {write_energy_record(res)}")

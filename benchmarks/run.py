@@ -11,10 +11,10 @@ import time
 import traceback
 
 from benchmarks import (adaptive_split, cloud_batching, collab_throughput,
-                        fig4_layerwise, fig5_methods, kernels_bench,
-                        roofline_report, table1_accuracy,
+                        energy_split, fig4_layerwise, fig5_methods,
+                        kernels_bench, roofline_report, table1_accuracy,
                         table2_split_latency)
-from benchmarks.common import write_collab_record
+from benchmarks.common import write_collab_record, write_energy_record
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
@@ -23,6 +23,7 @@ BENCHES = [
     ("collab_throughput", collab_throughput.run),
     ("cloud_batching", cloud_batching.run),
     ("adaptive_split", adaptive_split.run),
+    ("energy_split", energy_split.run),
     ("kernels", kernels_bench.run),
     ("table1_accuracy", table1_accuracy.run),
     ("roofline", roofline_report.run),
@@ -58,6 +59,8 @@ def main() -> None:
         fn = write_collab_record(results["cloud_batching"],
                                  results.get("collab_throughput"))
         print(f"\nperf record: {fn}")
+    if args.json and "energy_split" in results:
+        print(f"perf record: {write_energy_record(results['energy_split'])}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

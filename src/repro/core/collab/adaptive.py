@@ -23,6 +23,19 @@ Execution of a switch lives in the runtimes: ``CollabRunner.set_split``
 (in-process) and ``EdgeClient.resplit`` (RESPLIT control frame on the
 live socket); ``repro.serving`` wires observation -> decision -> switch
 per request.
+
+**Battery-aware re-planning** (the energy subsystem's control hook): a
+controller built with an ``EnergyPolicy`` prices every sweep row into a
+``(T, E_edge)`` pair and scores candidates with the weighted
+latency·energy objective instead of raw latency. When the policy
+carries a ``battery_j`` budget, each request's reported ``e_edge_j``
+drains it (``drain``), and the effective energy weight scales with
+*urgency* — the inverse square of the remaining battery fraction — so
+a full battery optimizes latency and a draining one walks the Pareto
+front toward the low-energy splits (typically earlier splits on
+compute-dominated devices: offload more, burn less) while meaningful
+budget remains. Same hysteresis + dwell guards apply, on the scored
+objective.
 """
 from __future__ import annotations
 
@@ -30,6 +43,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import CNNConfig
+from repro.core.partition.energy_model import EnergyPolicy
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
                                                 compacted_cnn_layer_costs,
@@ -65,6 +79,7 @@ class AdaptivePolicy:
             raise ValueError("hysteresis must be >= 0")
 
     def to_json(self) -> Dict[str, Any]:
+        """Serialize for ``plan.json`` (the digest-folded form)."""
         return {"candidates": [int(c) for c in self.candidates],
                 "ewma_alpha": self.ewma_alpha,
                 "min_samples": self.min_samples,
@@ -96,6 +111,8 @@ class BandwidthEstimator:
         self._ewma: Optional[float] = None
 
     def observe(self, tx_bytes: float, t_tx: float) -> None:
+        """Feed one uplink observation (payload bytes over send
+        seconds); edge-only requests (no uplink) are ignored."""
         if tx_bytes <= 0 or t_tx <= 0:
             return                       # edge-only request: no uplink signal
         sample = tx_bytes / max(t_tx - self.rtt_s, 1e-9)
@@ -122,13 +139,23 @@ class SplitSwitch:
     est_bandwidth: float            # bytes/s the decision was based on
     current_T: float                # predicted Eq. 5 latency, old split
     predicted_T: float              # predicted Eq. 5 latency, new split
+    current_E: Optional[float] = None    # predicted edge joules, old split
+    predicted_E: Optional[float] = None  # predicted edge joules, new split
+    battery_j: Optional[float] = None    # remaining budget at decision time
 
     def describe(self) -> str:
+        """One-line human summary (ms, Mbps, mJ, remaining joules)."""
+        energy = ""
+        if self.predicted_E is not None:
+            energy = (f", {self.current_E * 1e3:.1f} -> "
+                      f"{self.predicted_E * 1e3:.1f} mJ")
+            if self.battery_j is not None:
+                energy += f", battery {self.battery_j * 1e3:.1f} mJ"
         return (f"resplit c={self.old_split}->{self.new_split} at request "
                 f"{self.request_index} (est link "
                 f"{self.est_bandwidth * 8 / 1e6:.1f} Mbps, predicted "
                 f"{self.current_T * 1e3:.1f} -> "
-                f"{self.predicted_T * 1e3:.1f} ms)")
+                f"{self.predicted_T * 1e3:.1f} ms{energy})")
 
 
 class AdaptiveSplitController:
@@ -143,7 +170,8 @@ class AdaptiveSplitController:
     """
 
     def __init__(self, costs, profile: TwoTierProfile, input_bytes: float,
-                 policy: AdaptivePolicy, split: int, tx_scale=1.0):
+                 policy: AdaptivePolicy, split: int, tx_scale=1.0,
+                 energy: Optional[EnergyPolicy] = None):
         if split not in policy.candidates:
             raise ValueError(f"initial split {split} not among the "
                              f"candidates {policy.candidates}")
@@ -153,6 +181,10 @@ class AdaptiveSplitController:
         self.policy = policy
         self.split = split
         self.tx_scale = tx_scale            # scalar or callable(split)
+        self.energy = energy
+        #: remaining battery budget in joules (None = unmetered)
+        self.battery_j = energy.battery_j if energy is not None else None
+        self._battery_j_init = self.battery_j
         self.estimator = BandwidthEstimator(policy.ewma_alpha,
                                             policy.min_samples,
                                             rtt_s=profile.link.rtt_s)
@@ -164,20 +196,62 @@ class AdaptiveSplitController:
     def for_deployment(cls, cfg: CNNConfig, policy: AdaptivePolicy,
                        split: int, profile: TwoTierProfile, masks=None,
                        compact: bool = False, codec: Optional[str] = None,
-                       pack: bool = False) -> "AdaptiveSplitController":
+                       pack: bool = False,
+                       energy: Optional[EnergyPolicy] = None
+                       ) -> "AdaptiveSplitController":
         """Build the controller for a concrete deployment: layer costs
         priced on the deployed (compacted/masked) shapes and a
         per-candidate ``wire_tx_scale`` so predicted T_TX matches what the
-        runtime will actually put on the wire at each candidate."""
+        runtime will actually put on the wire at each candidate.
+        ``energy`` (the plan's ``energy`` section) arms the battery-aware
+        weighted objective."""
         costs = (compacted_cnn_layer_costs(cfg, masks) if compact
                  else cnn_layer_costs(cfg, masks))
         return cls(costs, profile, cnn_input_bytes(cfg), policy, split,
                    tx_scale=lambda c: wire_tx_scale(
                        cfg, masks, c, codec=codec, pack=pack,
-                       compact=compact))
+                       compact=compact),
+                   energy=energy)
 
-    def observe(self, tx_bytes: float, t_tx: float) -> None:
+    # -- battery accounting --------------------------------------------------
+    @property
+    def battery_fraction(self) -> Optional[float]:
+        """Remaining battery as a fraction of the configured budget
+        (None when the deployment is unmetered)."""
+        if self.battery_j is None or not self._battery_j_init:
+            return None
+        return max(self.battery_j, 0.0) / self._battery_j_init
+
+    @property
+    def effective_energy_weight(self) -> float:
+        """The s/J exchange rate the scorer uses *right now*: the
+        policy's static knob, scaled by battery urgency — the inverse
+        *square* of the remaining fraction — when a ``battery_j``
+        budget is armed. A full battery optimizes latency; at half
+        charge the device already pays 4x more seconds per joule saved,
+        so the walk toward the low-energy splits happens while there is
+        still meaningful budget left, not at the moment of exhaustion."""
+        if self.energy is None:
+            return 0.0
+        w = self.energy.energy_weight_s_per_j
+        frac = self.battery_fraction
+        if frac is None:
+            return w
+        return w / max(frac, 1e-3) ** 2
+
+    def drain(self, e_edge_j: Optional[float]) -> None:
+        """Subtract one request's measured edge energy from the battery
+        budget (no-op when unmetered or the request reported no energy)."""
+        if self.battery_j is not None and e_edge_j is not None:
+            self.battery_j = max(self.battery_j - e_edge_j, 0.0)
+
+    def observe(self, tx_bytes: float, t_tx: float,
+                e_edge_j: Optional[float] = None) -> None:
+        """Record one request: uplink observation (bytes, seconds) for
+        the bandwidth estimator, measured edge joules for the battery
+        budget, and the dwell counter."""
         self.estimator.observe(tx_bytes, t_tx)
+        self.drain(e_edge_j)
         self.n_requests += 1
         self._since_switch += 1
 
@@ -189,7 +263,9 @@ class AdaptiveSplitController:
         self._since_switch = 0
 
     def sweep(self, bandwidth: float) -> List[Dict[str, float]]:
-        """The Eq. 5 greedy sweep over the candidates at ``bandwidth``."""
+        """The Eq. 5 greedy sweep over the candidates at ``bandwidth``,
+        energy-priced (``E_edge`` joules per row) when the controller
+        carries an ``EnergyPolicy``."""
         link = LinkProfile(f"measured {bandwidth * 8 / 1e6:.1f} Mbps",
                            bandwidth=bandwidth,
                            rtt_s=self.profile.link.rtt_s)
@@ -197,27 +273,47 @@ class AdaptiveSplitController:
                               link)
         return sweep_splits(self.costs, prof, self.input_bytes,
                             candidates=self.policy.candidates,
-                            tx_scale=self.tx_scale)
+                            tx_scale=self.tx_scale,
+                            energy=(self.energy.profile
+                                    if self.energy is not None else None))
+
+    def _score(self, row: Dict[str, float]) -> float:
+        """Objective of one sweep row: plain Eq. 5 latency, or the
+        battery-urgency-weighted latency·energy score."""
+        if self.energy is None:
+            return row["T"]
+        return self.energy.score(row, self.effective_energy_weight)
 
     def maybe_switch(self) -> Optional[SplitSwitch]:
+        """Decide (but do not execute) a split switch: re-sweep at the
+        estimated bandwidth, apply the objective (latency or
+        battery-weighted latency·energy), guard with hysteresis and
+        dwell; returns the ``SplitSwitch`` or None."""
         if not self.estimator.ready or self._since_switch < self.policy.dwell:
             return None
         bw = self.estimator.bandwidth
         table = self.sweep(bw)
-        best = min(table, key=lambda r: r["T"])
+        best = min(table, key=self._score)
         cur = next(r for r in table if r["split"] == self.split)
         if best["split"] == self.split:
             return None
-        if best["T"] > (1.0 - self.policy.hysteresis) * cur["T"]:
+        if self._score(best) > (1.0 - self.policy.hysteresis) \
+                * self._score(cur):
             return None                  # not enough predicted win: hold
         sw = SplitSwitch(self.n_requests, self.split, int(best["split"]),
-                         bw, cur["T"], best["T"])
+                         bw, cur["T"], best["T"],
+                         current_E=cur.get("E_edge"),
+                         predicted_E=best.get("E_edge"),
+                         battery_j=self.battery_j)
         self.split = sw.new_split
         self._since_switch = 0
         self.history.append(sw)
         return sw
 
-    def step(self, tx_bytes: float, t_tx: float) -> Optional[SplitSwitch]:
-        """Feed one request's uplink observation; maybe decide a switch."""
-        self.observe(tx_bytes, t_tx)
+    def step(self, tx_bytes: float, t_tx: float,
+             e_edge_j: Optional[float] = None) -> Optional[SplitSwitch]:
+        """Feed one request's uplink observation (and, on an
+        energy-metered deployment, its measured edge joules — it drains
+        the battery budget); maybe decide a switch."""
+        self.observe(tx_bytes, t_tx, e_edge_j)
         return self.maybe_switch()

@@ -128,9 +128,11 @@ class BatchingPolicy:
 
     @property
     def resolved_buckets(self) -> Tuple[int, ...]:
+        """The effective bucket set (explicit, or powers of two)."""
         return self.buckets or default_buckets(self.max_batch)
 
     def to_json(self) -> Dict[str, Any]:
+        """Serialize for ``plan.json`` (the digest-folded form)."""
         return {"max_batch": self.max_batch,
                 "max_wait_ms": self.max_wait_ms,
                 "buckets": [int(b) for b in self.buckets]}
@@ -167,6 +169,8 @@ class LaneStats:
         return self.padded_rows / total if total else 0.0
 
     def to_json(self) -> Dict[str, Any]:
+        """JSON-ready per-lane record (rows/frames/batches counts,
+        ``busy_s`` seconds inside the jitted call, padding waste)."""
         return {"lane": list(map(str, self.lane)), "rows": self.rows,
                 "frames": self.frames, "batches": self.batches,
                 "padded_rows": self.padded_rows, "busy_s": self.busy_s,

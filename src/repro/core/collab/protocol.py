@@ -82,6 +82,11 @@ _CODEC_DTYPE = {"fp32": np.float32, "fp16": np.float16, "int8": np.uint8}
 
 
 def encode_tensor(arr: np.ndarray) -> bytes:
+    """Encode an ndarray as one self-describing raw tensor frame
+    (``REPR`` magic + dtype + shape + payload). The returned length in
+    bytes is what the runtimes report as ``tx_bytes`` when no feature
+    codec is armed; the socket path's 8-byte length prefix is transport
+    framing on top of this and is excluded from accounting."""
     arr = np.ascontiguousarray(arr)
     dt = arr.dtype.str.encode().ljust(16, b"\0")
     hdr = _HDR.pack(MAGIC, arr.ndim, dt)
@@ -91,7 +96,8 @@ def encode_tensor(arr: np.ndarray) -> bytes:
 
 
 def decode_tensor(buf: bytes) -> Tuple[np.ndarray, int]:
-    """Returns (array, bytes_consumed)."""
+    """Decode one raw tensor frame -> (array, bytes consumed). The
+    array is a zero-copy read-only view into ``buf``."""
     magic, ndim, dt = _HDR.unpack_from(buf, 0)
     if magic != MAGIC:
         raise ValueError("bad frame magic")
@@ -272,6 +278,8 @@ def frame_lane(buf: bytes) -> str:
 
 
 def write_tensor(fp: BinaryIO, arr: np.ndarray) -> int:
+    """Write one length-prefixed raw tensor frame to a binary stream;
+    returns the total bytes written (payload + 8-byte prefix)."""
     data = encode_tensor(arr)
     fp.write(struct.pack("<Q", len(data)))
     fp.write(data)
@@ -280,6 +288,9 @@ def write_tensor(fp: BinaryIO, arr: np.ndarray) -> int:
 
 
 def read_exact(fp: BinaryIO, n: int) -> bytes:
+    """Read exactly ``n`` bytes from a binary stream (raises ``EOFError``
+    if the peer closes early) — the stream twin of
+    ``repro.core.collab.channel.recv_exact``."""
     chunks = []
     got = 0
     while got < n:
@@ -292,6 +303,7 @@ def read_exact(fp: BinaryIO, n: int) -> bytes:
 
 
 def read_tensor(fp: BinaryIO) -> np.ndarray:
+    """Read one length-prefixed raw tensor frame from a binary stream."""
     (n,) = struct.unpack("<Q", read_exact(fp, 8))
     arr, _ = decode_tensor(read_exact(fp, n))
     return arr

@@ -91,10 +91,15 @@ from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
 
 @dataclass
 class RequestTiming:
+    """Per-request accounting: ``t_*`` in seconds, ``tx_bytes`` the
+    transmitted frame payload in bytes, ``e_edge_j`` the edge device's
+    energy in joules (None on an un-metered deployment — i.e. no
+    ``EnergyProfile`` attached)."""
     t_device: float
     t_tx: float
     t_server: float
     tx_bytes: int
+    e_edge_j: Optional[float] = None
 
     @property
     def total(self) -> float:
@@ -292,7 +297,8 @@ class CollabRunner:
                  realtime_channel: bool = False,
                  simulate_compute: bool = True,
                  compact: bool = False, codec: Optional[str] = None,
-                 pack: bool = False, trace: Optional[LinkTrace] = None):
+                 pack: bool = False, trace: Optional[LinkTrace] = None,
+                 energy=None):
         self.cfg = cfg
         self.split = split
         self.profile = profile
@@ -303,9 +309,24 @@ class CollabRunner:
         self.channel = SimChannel(profile.link, realtime=realtime_channel,
                                   trace=trace)
         self.simulate_compute = simulate_compute
+        #: optional ``EnergyProfile`` — when set, every RequestTiming
+        #: carries ``e_edge_j`` (joules) priced from the same breakdown
+        #: the timing reports (one formula for analytic and measured)
+        self.energy = energy
         self._bank = SplitFnBank(params, cfg, masks, compact, pack)
         self.deploy_cfg = self._bank.deploy_cfg
         self.set_split(split)
+
+    def _timing(self, t_device: float, t_tx: float, t_server: float,
+                tx_bytes: int) -> RequestTiming:
+        """Assemble one request's accounting record, energy-priced when
+        the runner carries an ``EnergyProfile`` (RTT peeled off the
+        uplink term and billed as waiting, per ``energy_breakdown``)."""
+        e = (self.energy.request_energy(t_device, t_tx, t_server,
+                                        rtt_s=self.profile.link.rtt_s)
+             if self.energy is not None else None)
+        return RequestTiming(t_device, t_tx, t_server, tx_bytes,
+                             e_edge_j=e)
 
     def warm(self, splits: Sequence[int]) -> None:
         """Pre-jit every candidate's edge/cloud pair (batch-1 shape) so an
@@ -376,10 +397,10 @@ class CollabRunner:
             self.channel.advance(self._analytic["T_S"] if
                                  self.simulate_compute else t3 - t2)
         if self.simulate_compute:
-            timing = RequestTiming(self._analytic["T_D"], t_tx,
-                                   self._analytic["T_S"], tx_bytes)
+            timing = self._timing(self._analytic["T_D"], t_tx,
+                                  self._analytic["T_S"], tx_bytes)
         else:
-            timing = RequestTiming(t1 - t0, t_tx, t3 - t2, tx_bytes)
+            timing = self._timing(t1 - t0, t_tx, t3 - t2, tx_bytes)
         return {"logits": np.asarray(out), "timing": timing,
                 "wallclock": {"edge": t1 - t0, "cloud": t3 - t2}}
 
@@ -454,11 +475,11 @@ class CollabRunner:
         for i in range(n):
             nbytes, t_tx = per_req[i]
             if self.simulate_compute:
-                timing = RequestTiming(self._analytic["T_D"], t_tx,
-                                       self._analytic["T_S"], nbytes)
+                timing = self._timing(self._analytic["T_D"], t_tx,
+                                      self._analytic["T_S"], nbytes)
             else:
-                timing = RequestTiming((t1 - t0) / n, t_tx,
-                                       (t3 - t2) / n, nbytes)
+                timing = self._timing((t1 - t0) / n, t_tx,
+                                      (t3 - t2) / n, nbytes)
             results.append({"logits": out[offs[i]:offs[i] + counts[i]],
                             "timing": timing,
                             "wallclock": {"edge": t1 - t0,

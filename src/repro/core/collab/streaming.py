@@ -152,10 +152,14 @@ class StreamingCollabRunner:
                 return
             ids, buf = item
             t0 = time.perf_counter()
+            t_model = 0.0
             if self._cloud_fn is not None:
-                self.channel.send(len(buf))
+                # the channel's *modeled* cost (bytes/bandwidth + RTT):
+                # with realtime_channel=False the wall-clock here is ~0,
+                # so per-request energy/latency attribution reads this
+                t_model = self.channel.send(len(buf))
             st.charge(time.perf_counter() - t0, len(ids))
-            cloud_q.put((ids, buf))
+            cloud_q.put((ids, buf, t_model))
 
     def _cloud_stage(self, cloud_q: queue.Queue, results: Dict[int, Dict],
                      st: StageStats) -> None:
@@ -163,7 +167,7 @@ class StreamingCollabRunner:
             item = cloud_q.get()
             if item is _DONE:
                 return
-            ids, buf = item
+            ids, buf, t_model = item
             t0 = time.perf_counter()
             if self._cloud_fn is not None:
                 x = jnp.asarray(decode_any(buf)[0])
@@ -173,8 +177,12 @@ class StreamingCollabRunner:
                 out, nbytes = np.asarray(buf), 0
             st.charge(time.perf_counter() - t0, len(ids))
             for j, rid in enumerate(ids):
+                # frame_n lets downstream consumers amortize per-FRAME
+                # constants (the RTT) the same way t_tx_model was split
                 results[rid] = {"logits": out[j:j + 1],
-                                "tx_bytes": nbytes / len(ids)}
+                                "tx_bytes": nbytes / len(ids),
+                                "t_tx_model": t_model / len(ids),
+                                "frame_n": len(ids)}
 
     # -- driver -------------------------------------------------------------
     def run(self, images: Sequence[np.ndarray]) -> StreamReport:

@@ -108,6 +108,7 @@ class LinkTrace:
         return bw, rtt
 
     def link_at(self, t: float) -> LinkProfile:
+        """The trace's link state ``t`` seconds in, as a LinkProfile."""
         bw, rtt = self.state_at(t)
         return LinkProfile(f"{self.name}@{t:.2f}s", bandwidth=bw, rtt_s=rtt)
 
@@ -152,6 +153,20 @@ PAPER_SERVER_BATCHED = ComputeProfile("RTX 3090 (batched CNN, bucket 8)",
 #: the heavy-traffic deployment: many edges, one batched cloud GPU
 PAPER_FARM_PROFILE = TwoTierProfile(PAPER_EDGE, PAPER_SERVER_BATCHED,
                                     PAPER_WIFI)
+
+# --- battery-constrained edge classes ---------------------------------------
+# The embedded devices the paper's motivation names ("resource-limited
+# embedded devices", high energy consumption). Their per-state power
+# draws live next door in ``repro.core.partition.energy_model``
+# (MCU_ENERGY / PI_ENERGY); these are the matching compute throughputs.
+#: MCU-class edge (Cortex-M/ESP32 class): reproduces the paper's
+#: AlexNet@224-vs-i7 regime — a split optimum that genuinely moves with
+#: the link — at benchmark scale.
+MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
+                          mem_bw=0.5e9, overhead_s=3e-4)
+#: Pi-class single-board edge (quad A72 class, NEON fp32)
+PI_EDGE = ComputeProfile("Pi-class edge", flops_per_s=6e9,
+                         mem_bw=4e9, overhead_s=2.5e-4)
 
 # --- Tier B: TPU v5e two-pod deployment -------------------------------------
 V5E_CHIP = ComputeProfile("TPU v5e chip", flops_per_s=197e12, mem_bw=819e9)

@@ -1,11 +1,16 @@
 """Split-point selection — Algorithm 1, lines 20-27 (greedy argmin), plus a
-beyond-paper pipelined variant.
+beyond-paper pipelined variant and the energy-aware objective.
 
 ``greedy_split`` is the paper's loop: evaluate T(G', j) for every candidate
 j and keep the argmin. ``balanced_split`` (Tier C, DESIGN.md §2) instead
 minimizes max(T_D, T_TX, T_S) — the steady-state bottleneck when requests
 stream and device/link/server overlap — which the paper's serial model
-cannot see.
+cannot see. ``energy_aware_split`` minimizes the weighted latency·energy
+objective of an ``EnergyPolicy`` (``repro.core.partition.energy_model``):
+the paper's motivation names battery-constrained embedded devices, and
+the latency optimum is not the joules optimum — ``sweep_splits`` prices
+every candidate into a ``(T_total, E_edge)`` pair when handed an
+``EnergyProfile``, and ``pareto_front`` reports the non-dominated menu.
 
 ``joint_two_stage`` wires the full paper pipeline together: DDPG pruning
 first (stage 1), greedy split on the pruned network (stage 2), per Eq. 6's
@@ -16,8 +21,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+from repro.core.partition.energy_model import (EnergyPolicy, EnergyProfile,
+                                               pareto_front, price_energy)
 from repro.core.partition.latency_model import LayerCost, split_latency
 from repro.core.partition.profiles import TwoTierProfile
+
+__all__ = ["SplitDecision", "sweep_splits", "greedy_split",
+           "balanced_split", "energy_aware_split", "pareto_front",
+           "joint_two_stage"]
 
 
 @dataclass
@@ -33,11 +44,18 @@ def sweep_splits(costs: Sequence[LayerCost], profile: TwoTierProfile,
                  measured_server_s: Optional[Sequence[float]] = None,
                  candidates: Optional[Sequence[int]] = None,
                  tx_scale: Union[float, Callable[[int], float]] = 1.0,
-                 round_trip: bool = False
+                 round_trip: bool = False,
+                 energy: Optional[EnergyProfile] = None
                  ) -> List[Dict[str, float]]:
     """Eq. 5 at every candidate split. ``tx_scale`` may be a callable
     ``split -> scale`` because the channel-packing discount depends on
-    which channels survive at each boundary (``wire_tx_scale``)."""
+    which channels survive at each boundary (``wire_tx_scale``).
+
+    With an ``energy`` profile, every row additionally carries the edge
+    energy columns ``E_comp``/``E_tx``/``E_wait``/``E_edge`` in joules
+    (and ``E_cloud`` when the profile prices the server) — the
+    ``(T_total, E_edge)`` pairs the energy-aware objective and the
+    Pareto reporter consume."""
     n = len(costs)
     cands = list(candidates) if candidates is not None else list(range(n + 1))
     table = []
@@ -47,6 +65,8 @@ def sweep_splits(costs: Sequence[LayerCost], profile: TwoTierProfile,
                             measured_device_s, measured_server_s,
                             tx_scale=scale, round_trip=round_trip)
         row["split"] = c
+        if energy is not None:
+            row = price_energy(row, energy, profile.link.rtt_s)
         table.append(row)
     return table
 
@@ -64,6 +84,26 @@ def balanced_split(costs: Sequence[LayerCost], profile: TwoTierProfile,
     """Beyond-paper: minimize the pipeline bottleneck max(T_D, T_TX, T_S)."""
     table = sweep_splits(costs, profile, input_bytes, **kw)
     best = min(table, key=lambda r: max(r["T_D"], r["T_TX"], r["T_S"]))
+    return SplitDecision(int(best["split"]), best, table)
+
+
+def energy_aware_split(costs: Sequence[LayerCost], profile: TwoTierProfile,
+                       input_bytes: float, policy: EnergyPolicy,
+                       energy_weight: Optional[float] = None,
+                       **kw) -> SplitDecision:
+    """Argmin of the weighted latency·energy objective
+    ``latency_weight * T + energy_weight_s_per_j * E_edge`` over the
+    candidate splits (Eq. 5 extended with the device's joules).
+
+    With ``energy_weight_s_per_j == 0`` this degenerates to the paper's
+    greedy latency argmin (while still reporting the energy columns);
+    ``energy_weight`` overrides the policy's static knob — the
+    battery-aware adaptive controller passes its urgency-scaled weight
+    here. The decision's ``table`` rows carry both ``T`` (seconds) and
+    ``E_edge`` (joules), ready for ``pareto_front``."""
+    table = sweep_splits(costs, profile, input_bytes,
+                         energy=policy.profile, **kw)
+    best = min(table, key=lambda r: policy.score(r, energy_weight))
     return SplitDecision(int(best["split"]), best, table)
 
 

@@ -18,13 +18,27 @@ and served through one session interface::
 Backends: ``local`` (in-process CollabRunner), ``socket`` (real TCP
 EdgeClient/serve_cloud with the HELLO digest handshake), ``streaming``
 (3-stage pipelined runtime). All take the full deployment contract from
-the plan and return the same result shape.
+the plan and return the same result shape — ``t_*`` keys in seconds,
+``tx_bytes`` in bytes, ``e_edge_j`` in joules.
+
+Energy metering: attach ``EnergyPolicy(profile=MCU_ENERGY, ...)`` as the
+plan's ``energy`` section to price every request's edge joules
+(``e_edge_j`` in each result), pick the split by the weighted
+latency·energy objective (``from_args(split=None)``), and — combined
+with an ``adaptive`` section and a ``battery_j`` budget — have the
+session re-split toward the low-energy end of the Pareto front as the
+battery drains. See ``docs/architecture.md`` and
+``docs/deployment-plan.md`` for the full serving contract.
 """
 from repro.core.collab.adaptive import (AdaptivePolicy,
                                         AdaptiveSplitController,
                                         BandwidthEstimator, SplitSwitch)
 from repro.core.collab.batching import BatchingPolicy, LaneStats
 from repro.core.collab.protocol import PlanMismatchError
+from repro.core.partition.energy_model import (ENERGY_PROFILES, MCU_ENERGY,
+                                               PAPER_EDGE_ENERGY, PI_ENERGY,
+                                               EnergyPolicy, EnergyProfile,
+                                               RadioProfile, pareto_front)
 from repro.core.partition.profiles import TRACES, LinkTrace, TraceSegment
 from repro.serving.plan import PLAN_VERSION, DeploymentPlan
 from repro.serving.session import (BACKENDS, CloudServer, InferenceSession,
@@ -38,4 +52,6 @@ __all__ = [
     "AdaptivePolicy", "AdaptiveSplitController", "BandwidthEstimator",
     "SplitSwitch", "LinkTrace", "TraceSegment", "TRACES",
     "BatchingPolicy", "LaneStats",
+    "EnergyPolicy", "EnergyProfile", "RadioProfile", "pareto_front",
+    "ENERGY_PROFILES", "MCU_ENERGY", "PI_ENERGY", "PAPER_EDGE_ENERGY",
 ]

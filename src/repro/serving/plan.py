@@ -51,6 +51,19 @@ the server's in-order response pipelining are deployment-contract-level
 behaviour both peers arm for (the edge's pipelined ``infer_many``
 assumes a server that reads ahead while batches are in flight).
 
+**Energy-metered plans**: setting ``energy=EnergyPolicy(profile=...)``
+attaches the edge device's power model
+(``repro.core.partition.energy_model``) to the deployment: every
+session result reports ``e_edge_j`` (joules the edge spent on that
+request) next to ``t_total``/``tx_bytes``, ``from_args(split=None)``
+picks the split by the weighted latency·energy objective instead of raw
+Eq. 5 latency, and — on an adaptive plan — a ``battery_j`` budget makes
+the controller walk the partition toward the low-energy splits as the
+budget drains. Like ``adaptive``/``batching``, the ``energy`` section
+is folded into the digest **only when set** (un-metered plans keep
+their digests): metering changes which split both peers deploy and may
+re-plan to, so peers must agree on it.
+
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
 from __future__ import annotations
@@ -70,13 +83,14 @@ from repro.configs.base import CNNConfig, ConvLayerSpec
 from repro.core.collab.adaptive import AdaptivePolicy
 from repro.core.collab.batching import BatchingPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
+from repro.core.partition.energy_model import EnergyPolicy
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
                                                 compacted_cnn_layer_costs,
                                                 wire_tx_scale)
 from repro.core.partition.profiles import (ComputeProfile, LinkProfile,
                                            PAPER_PROFILE, TwoTierProfile)
-from repro.core.partition.splitter import greedy_split
+from repro.core.partition.splitter import energy_aware_split, greedy_split
 from repro.models.cnn import init_cnn_params
 
 PLAN_VERSION = 1
@@ -132,6 +146,7 @@ class DeploymentPlan:
     shape_link: bool = True
     adaptive: Optional[AdaptivePolicy] = None
     batching: Optional[BatchingPolicy] = None
+    energy: Optional[EnergyPolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -171,16 +186,25 @@ class DeploymentPlan:
         compacted when ``compact``, masked otherwise — with the true wire
         cost per candidate priced in (``wire_tx_scale``: codec bytes per
         element x channel packing, the same model the runtimes and the
-        adaptive controller use)."""
+        adaptive controller use). On a plan with an ``energy`` section
+        the auto-pick minimizes that policy's weighted latency·energy
+        objective instead of raw latency (identical splits when the
+        energy weight is 0)."""
         if split is None:
             deploy_compact = compact and bool(masks)
             costs = (compacted_cnn_layer_costs(cfg, masks)
                      if deploy_compact else cnn_layer_costs(cfg, masks))
-            split = greedy_split(
-                costs, profile, cnn_input_bytes(cfg),
-                tx_scale=lambda c: wire_tx_scale(
-                    cfg, masks, c, codec=codec, pack=pack,
-                    compact=deploy_compact)).split_point
+            scale = lambda c: wire_tx_scale(    # noqa: E731
+                cfg, masks, c, codec=codec, pack=pack,
+                compact=deploy_compact)
+            energy = transport.get("energy")
+            if energy is not None:
+                split = energy_aware_split(
+                    costs, profile, cnn_input_bytes(cfg), energy,
+                    tx_scale=scale).split_point
+            else:
+                split = greedy_split(costs, profile, cnn_input_bytes(cfg),
+                                     tx_scale=scale).split_point
         return cls(cfg=cfg, params=params, split=int(split), masks=masks,
                    compact=compact, codec=codec, pack=pack, profile=profile,
                    **transport)
@@ -212,7 +236,11 @@ class DeploymentPlan:
         their digests. The batching section follows the same rule: only
         present when set (pre-batching digests stable), and folded in
         because the bucket/warm set and the server's pipelined in-order
-        response behaviour are part of what the peers arm for."""
+        response behaviour are part of what the peers arm for. The
+        energy section likewise: only present when set (un-metered plans
+        keep their digests), folded in because metering changes which
+        split the deployment picks and may re-plan to under a battery
+        budget."""
         masks = None
         if self.masks:
             masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
@@ -225,6 +253,8 @@ class DeploymentPlan:
             doc["adaptive"] = self.adaptive.to_json()
         if self.batching is not None:
             doc["batching"] = self.batching.to_json()
+        if self.energy is not None:
+            doc["energy"] = self.energy.to_json()
         return doc
 
     @property
@@ -255,6 +285,8 @@ class DeploymentPlan:
                             if self.adaptive else None),
                "batching": (self.batching.to_json()
                             if self.batching else None),
+               "energy": (self.energy.to_json()
+                          if self.energy else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -279,6 +311,8 @@ class DeploymentPlan:
                     if doc.get("adaptive") else None)
         batching = (BatchingPolicy.from_json(doc["batching"])
                     if doc.get("batching") else None)
+        energy = (EnergyPolicy.from_json(doc["energy"])
+                  if doc.get("energy") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -286,7 +320,8 @@ class DeploymentPlan:
                    host=link["host"], port=link["port"],
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
-                   batching=batching, version=doc["version"])
+                   batching=batching, energy=energy,
+                   version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -296,6 +331,8 @@ class DeploymentPlan:
 
     # -- convenience --------------------------------------------------------
     def describe(self) -> str:
+        """One-line human summary of the deployment contract (digest,
+        split, pruning, wire encoding, link endpoint, armed sections)."""
         n = len(self.cfg.layers)
         prune = (f"{len(self.masks)} masked layers" if self.masks
                  else "dense")
@@ -304,9 +341,15 @@ class DeploymentPlan:
         batch = (f", batched<= {self.batching.max_batch}"
                  f"@{self.batching.max_wait_ms}ms"
                  if self.batching else "")
+        joule = ""
+        if self.energy is not None:
+            joule = (f", energy={self.energy.profile.name}"
+                     f"@{self.energy.energy_weight_s_per_j:g}s/J")
+            if self.energy.battery_j is not None:
+                joule += f" battery={self.energy.battery_j:g}J"
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name}){adapt}{batch}")
+                f"({self.profile.link.name}){adapt}{batch}{joule}")

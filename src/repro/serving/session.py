@@ -17,13 +17,19 @@ Every backend returns the same result shape from ``infer`` /
 ``infer_many``::
 
     {"logits": np.ndarray, "t_edge": float|None, "t_upstream": float|None,
-     "t_total": float|None, "tx_bytes": int|None}
+     "t_total": float|None, "tx_bytes": int|None, "e_edge_j": float|None}
 
-where ``t_upstream`` is everything past the edge (network + cloud) and a
-``None`` marks a quantity the backend cannot attribute per request (e.g.
-per-request wall time inside the pipelined backends). ``tx_bytes`` is the
+with uniform key semantics across the three backends: ``t_*`` are
+seconds, ``tx_bytes`` is bytes, ``e_*`` are joules. ``t_upstream`` is
+everything past the edge (network + cloud) and a ``None`` marks a
+quantity the backend cannot attribute per request (e.g. per-request
+wall time inside the pipelined backends). ``tx_bytes`` is the
 transmitted frame *payload* — identical across backends for the same plan
 (the socket path's 8-byte length prefix is framing, not payload).
+``e_edge_j`` is the edge device's energy for the request, priced by the
+plan's ``energy`` section (``None`` on an un-metered plan, and on the
+socket backend's pipelined ``infer_many`` where the uplink time cannot
+be attributed per request).
 
 **Adaptive plans** (``plan.adaptive`` set): the ``local`` and ``socket``
 sessions close the control loop per request — each ``infer`` feeds its
@@ -60,16 +66,21 @@ def _controller_for(plan: DeploymentPlan) -> Optional[AdaptiveSplitController]:
         return None
     return AdaptiveSplitController.for_deployment(
         plan.cfg, plan.adaptive, plan.split, plan.profile, masks=plan.masks,
-        compact=plan.compact, codec=plan.codec, pack=plan.pack)
+        compact=plan.compact, codec=plan.codec, pack=plan.pack,
+        energy=plan.energy)
 
 
 def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
-            tx_bytes: Optional[int]) -> Dict:
+            tx_bytes: Optional[int],
+            e_edge_j: Optional[float] = None) -> Dict:
+    """The one result shape every backend returns: ``t_*`` seconds,
+    ``tx_bytes`` bytes, ``e_edge_j`` joules (None = unattributable or
+    un-metered)."""
     total = (None if t_edge is None or t_upstream is None
              else t_edge + t_upstream)
     return {"logits": np.asarray(logits), "t_edge": t_edge,
             "t_upstream": t_upstream, "t_total": total,
-            "tx_bytes": tx_bytes}
+            "tx_bytes": tx_bytes, "e_edge_j": e_edge_j}
 
 
 class InferenceSession:
@@ -88,6 +99,9 @@ class InferenceSession:
         self.switches: List[SplitSwitch] = []
 
     def infer(self, image: np.ndarray) -> Dict:
+        """Serve one request (image ``(B, H, W, C)`` float32); returns
+        the uniform result dict (``t_*`` seconds, ``tx_bytes`` bytes,
+        ``e_edge_j`` joules)."""
         raise NotImplementedError
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
@@ -95,6 +109,8 @@ class InferenceSession:
         return [self.infer(img) for img in images]
 
     def close(self) -> None:
+        """Release the backend's resources (sockets, worker threads);
+        in-process backends need no teardown."""
         pass
 
     def __enter__(self) -> "InferenceSession":
@@ -123,23 +139,27 @@ class LocalSession(InferenceSession):
             plan.params, plan.cfg, plan.split, plan.profile,
             masks=plan.masks, realtime_channel=realtime_channel,
             simulate_compute=simulate_compute, compact=plan.compact,
-            codec=plan.codec, pack=plan.pack, trace=trace)
+            codec=plan.codec, pack=plan.pack, trace=trace,
+            energy=plan.energy.profile if plan.energy else None)
         self._controller = _controller_for(plan)
         if self._controller is not None:
             # pre-jit every candidate so a switch doesn't stall a request
             self._runner.warm(plan.adaptive.candidates)
 
     def infer(self, image: np.ndarray) -> Dict:
+        """One in-process request: device/server terms from the analytic
+        profile (seconds), channel charged per byte, ``e_edge_j`` priced
+        by the plan's energy section; feeds the adaptive controller."""
         res = self._runner.infer(image)
         t = res["timing"]
         if self._controller is not None:
-            sw = self._controller.step(t.tx_bytes, t.t_tx)
+            sw = self._controller.step(t.tx_bytes, t.t_tx, t.e_edge_j)
             if sw is not None:
                 self._runner.set_split(sw.new_split)
                 self.split = sw.new_split
                 self.switches.append(sw)
         return _result(res["logits"], t.t_device, t.t_tx + t.t_server,
-                       t.tx_bytes)
+                       t.tx_bytes, t.e_edge_j)
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         """Batched fast path when the plan carries a ``batching`` section
@@ -163,7 +183,8 @@ class LocalSession(InferenceSession):
                     chunk, bucket=bucket_for(chunk_rows, buckets)):
                 t = r["timing"]
                 out.append(_result(r["logits"], t.t_device,
-                                   t.t_tx + t.t_server, t.tx_bytes))
+                                   t.t_tx + t.t_server, t.tx_bytes,
+                                   t.e_edge_j))
             chunk, chunk_rows = [], 0
 
         for img in images:
@@ -222,16 +243,32 @@ class SocketSession(InferenceSession):
         if self._controller is not None:
             self._controller.note_external_switch(split)
 
+    def _energy(self, res: Dict) -> Optional[float]:
+        """Price one synchronous request's edge joules from its measured
+        breakdown: edge compute wall-clock, the channel's modeled uplink
+        cost, and the remaining wait (cloud + downlink)."""
+        if self.plan.energy is None:
+            return None
+        t_wait = max(res["t_net_and_cloud"] - res["t_tx"], 0.0)
+        return self.plan.energy.profile.request_energy(
+            res["t_edge"], res["t_tx"], t_wait,
+            rtt_s=self.plan.profile.link.rtt_s)
+
     def infer(self, image: np.ndarray) -> Dict:
+        """One synchronous request/response on the live socket; measured
+        wall-clock timing (seconds), modeled uplink cost as ``t_tx``,
+        ``e_edge_j`` joules when metered; feeds the adaptive controller
+        and executes any decided RESPLIT."""
         res = self._client.infer(image)
+        e = self._energy(res)
         if self._controller is not None:
-            sw = self._controller.step(res["tx_bytes"], res["t_tx"])
+            sw = self._controller.step(res["tx_bytes"], res["t_tx"], e)
             if sw is not None:
                 self._client.resplit(sw.new_split)
                 self.split = sw.new_split
                 self.switches.append(sw)
         return _result(res["logits"], res["t_edge"],
-                       res["t_net_and_cloud"], res["tx_bytes"])
+                       res["t_net_and_cloud"], res["tx_bytes"], e)
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         """Pipelined submit/collect: edge compute of request i+1 overlaps
@@ -251,6 +288,7 @@ class SocketSession(InferenceSession):
                 for r in out]
 
     def close(self) -> None:
+        """Drain any pipelined requests and close the TCP connection."""
         self._client.close()
 
 
@@ -273,13 +311,36 @@ class StreamingSession(InferenceSession):
         self.last_report: Optional[StreamReport] = None
 
     def infer(self, image: np.ndarray) -> Dict:
+        """Serve one request through the pipeline (prefer ``infer_many``
+        — a single request cannot overlap anything)."""
         return self.infer_many([image])[0]
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         rep = self._runner.run(list(images))
         self.last_report = rep
-        return [_result(r["logits"], None, None, int(r["tx_bytes"]))
-                for r in rep.results]
+        energy = self.plan.energy.profile if self.plan.energy else None
+        n = max(len(rep.results), 1)
+        # per-request stage attribution: measured busy wall-clock of the
+        # edge/cloud stages amortized over the stream, plus the channel's
+        # *modeled* per-request uplink cost (the pipelined wall-clock of
+        # an individual request is not observable, which is why t_* stay
+        # None below — but the energy integral over the stream is)
+        t_edge_amort = rep.stages["edge"].busy_s / n
+        t_cloud_amort = rep.stages["cloud"].busy_s / n
+        out = []
+        for r in rep.results:
+            # a micro-batched frame pays ONE RTT shared by its requests,
+            # and t_tx_model above is that frame's cost split evenly —
+            # so the RTT peeled off in the energy formula must be split
+            # the same way or multi-request frames would zero their
+            # radio-active TX time
+            e = (energy.request_energy(
+                    t_edge_amort, r["t_tx_model"], t_cloud_amort,
+                    rtt_s=self.plan.profile.link.rtt_s / r["frame_n"])
+                 if energy is not None else None)
+            out.append(_result(r["logits"], None, None,
+                               int(r["tx_bytes"]), e))
+        return out
 
 
 def connect(plan: DeploymentPlan, backend: str = "local",
@@ -365,6 +426,8 @@ class CloudServer:
             raise TimeoutError("cloud server failed to start listening")
 
     def stop(self, timeout: float = 10.0) -> None:
+        """Signal the serve loop to quit and join its thread (seconds);
+        fills ``batch_stats`` when the plan batches."""
         self._stop.set()
         self._thread.join(timeout)
 

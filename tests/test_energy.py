@@ -1,0 +1,350 @@
+"""Energy-aware split optimization: the (T, E) pricing model, the
+weighted objective and Pareto reporter, battery-aware adaptive control,
+plan digest semantics for the ``energy`` section, and e_edge_j result
+parity across the three serving backends."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.core.partition.energy_model import (EnergyPolicy, EnergyProfile,
+                                               MCU_ENERGY, PI_ENERGY,
+                                               RadioProfile, pareto_front,
+                                               split_energy)
+from repro.core.partition.latency_model import (cnn_input_bytes,
+                                                compacted_cnn_layer_costs,
+                                                wire_tx_scale)
+from repro.core.partition.profiles import (LinkProfile, MCU_EDGE,
+                                           PAPER_PROFILE, TraceSegment,
+                                           TwoTierProfile)
+from repro.core.partition.splitter import (energy_aware_split, greedy_split,
+                                           sweep_splits)
+from repro.core.collab.adaptive import AdaptivePolicy, AdaptiveSplitController
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import init_cnn_params, prunable_layers, tiny_cnn_config
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cnn_config(num_classes=7, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(
+        params, cfg, {i: 0.5 for i in prunable_layers(cfg)})
+    costs = compacted_cnn_layer_costs(cfg, masks)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3)),
+                   np.float32)
+    return cfg, params, masks, costs, x
+
+
+def mcu_profile(mbps=50.0, rtt_s=1e-3) -> TwoTierProfile:
+    return TwoTierProfile(MCU_EDGE, PAPER_PROFILE.server,
+                          LinkProfile("test", bandwidth=mbps * 1e6 / 8,
+                                      rtt_s=rtt_s))
+
+
+def _tx_scale(cfg, masks):
+    return lambda c: wire_tx_scale(cfg, masks, c, codec="fp32", compact=True)
+
+
+# ---------------------------------------------------------------------------
+# the pricing formula
+# ---------------------------------------------------------------------------
+def test_energy_breakdown_arithmetic():
+    """Hand-checked joules: TX active time excludes the RTT, which is
+    billed as waiting together with the server time."""
+    prof = EnergyProfile("dev", compute_power_w=2.0, idle_power_w=0.5,
+                         radio=RadioProfile("r", tx_power_w=1.0,
+                                            rx_power_w=0.25,
+                                            idle_power_w=0.1))
+    br = prof.energy_breakdown(t_device=1.0, t_tx=0.3, t_server=0.2,
+                               rtt_s=0.1)
+    assert br["e_comp_j"] == pytest.approx(1.0 * (2.0 + 0.1))
+    assert br["e_tx_j"] == pytest.approx(0.2 * 1.0)      # 0.3 - RTT 0.1
+    assert br["e_wait_j"] == pytest.approx((0.1 + 0.2) * (0.5 + 0.25))
+    assert br["e_edge_j"] == pytest.approx(
+        br["e_comp_j"] + br["e_tx_j"] + br["e_wait_j"])
+    # no-transmission request: everything is compute
+    br0 = prof.energy_breakdown(1.0, 0.0, 0.0, rtt_s=0.1)
+    assert br0["e_tx_j"] == 0.0 and br0["e_wait_j"] == 0.0
+
+
+def test_negative_power_rejected():
+    with pytest.raises(ValueError, match=">= 0"):
+        RadioProfile("r", tx_power_w=-1.0, rx_power_w=0.1)
+    with pytest.raises(ValueError, match=">= 0"):
+        EnergyProfile("d", compute_power_w=-0.1, idle_power_w=0.0,
+                      radio=MCU_ENERGY.radio)
+    with pytest.raises(ValueError, match="battery_j"):
+        EnergyPolicy(profile=MCU_ENERGY, battery_j=0.0)
+    with pytest.raises(ValueError, match="weights"):
+        EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=-1.0)
+
+
+def test_sweep_rows_carry_energy_columns(setup):
+    cfg, _, masks, costs, _ = setup
+    prof = mcu_profile()
+    tab = sweep_splits(costs, prof, cnn_input_bytes(cfg), energy=MCU_ENERGY,
+                       tx_scale=_tx_scale(cfg, masks))
+    for row in tab:
+        for key in ("E_comp", "E_tx", "E_wait", "E_edge"):
+            assert key in row and row[key] >= 0.0
+        assert row["E_edge"] == pytest.approx(
+            row["E_comp"] + row["E_tx"] + row["E_wait"])
+        # the per-row pricing equals the single-split entry point
+        solo = split_energy(costs, int(row["split"]), prof, MCU_ENERGY,
+                            cnn_input_bytes(cfg),
+                            tx_scale=_tx_scale(cfg, masks)(int(row["split"])))
+        assert solo["E_edge"] == pytest.approx(row["E_edge"])
+    # all-edge split: no TX, no wait
+    last = tab[-1]
+    assert last["split"] == len(costs)
+    assert last["E_tx"] == 0.0 and last["E_wait"] == 0.0
+    # the paper-edge profile prices the cloud for completeness
+    tab_cloud = sweep_splits(costs, prof, cnn_input_bytes(cfg),
+                             energy=serving.PAPER_EDGE_ENERGY)
+    assert all("E_cloud" in r for r in tab_cloud)
+    assert tab_cloud[-1]["E_cloud"] == 0.0          # nothing runs remotely
+
+
+# ---------------------------------------------------------------------------
+# the weighted objective + Pareto front
+# ---------------------------------------------------------------------------
+def test_zero_weight_degenerates_to_greedy(setup):
+    cfg, _, masks, costs, _ = setup
+    prof = mcu_profile()
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.0)
+    kw = dict(tx_scale=_tx_scale(cfg, masks))
+    assert (energy_aware_split(costs, prof, cnn_input_bytes(cfg), pol,
+                               **kw).split_point
+            == greedy_split(costs, prof, cnn_input_bytes(cfg),
+                            **kw).split_point)
+
+
+def test_energy_objective_flips_split(setup):
+    """Acceptance regime: on the MCU class at 50 Mbps / 1 ms RTT the
+    latency argmin offloads but the weighted objective keeps more
+    layers on the device (the radio is the expensive peripheral)."""
+    cfg, _, masks, costs, _ = setup
+    prof = mcu_profile()
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.5)
+    kw = dict(tx_scale=_tx_scale(cfg, masks))
+    t_pick = greedy_split(costs, prof, cnn_input_bytes(cfg), **kw)
+    e_pick = energy_aware_split(costs, prof, cnn_input_bytes(cfg), pol, **kw)
+    assert e_pick.split_point != t_pick.split_point
+    t_row = next(r for r in e_pick.table
+                 if r["split"] == t_pick.split_point)
+    assert e_pick.latency["E_edge"] < t_row["E_edge"]
+
+
+def test_pareto_front_monotone(setup):
+    cfg, _, masks, costs, _ = setup
+    for mbps in (50.0, 5.0):
+        tab = sweep_splits(costs, mcu_profile(mbps), cnn_input_bytes(cfg),
+                           energy=MCU_ENERGY, tx_scale=_tx_scale(cfg, masks))
+        front = pareto_front(tab)
+        assert front, "empty Pareto front"
+        ts = [r["T"] for r in front]
+        es = [r["E_edge"] for r in front]
+        assert ts == sorted(ts)                      # T ascending
+        assert all(a > b for a, b in zip(es, es[1:]))  # E strictly down
+        # endpoints: the latency argmin and the energy argmin survive
+        assert front[0]["T"] == min(r["T"] for r in tab)
+        assert front[-1]["E_edge"] == min(r["E_edge"] for r in tab)
+        # nothing on the front is dominated by any table row
+        for f in front:
+            assert not any(r["T"] <= f["T"] and r["E_edge"] < f["E_edge"]
+                           for r in tab)
+
+
+# ---------------------------------------------------------------------------
+# degenerate links and battery exhaustion
+# ---------------------------------------------------------------------------
+def test_trace_rejects_zero_bandwidth_segment():
+    """An outage must be modeled as a tiny positive bandwidth, never 0
+    (byte-draining loops would spin forever)."""
+    from repro.core.partition.profiles import LinkTrace
+    with pytest.raises(ValueError, match="bandwidth > 0"):
+        LinkTrace("dead", (TraceSegment(1.0, 0.0),))
+
+
+def test_near_zero_bandwidth_forces_all_edge(setup):
+    """Under an outage segment (1 kbit/s) both seconds and joules of any
+    transmitting split explode, so the energy objective lands on the
+    all-edge split."""
+    cfg, _, masks, costs, _ = setup
+    prof = mcu_profile(mbps=0.001)                   # 1 kbit/s outage
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.5)
+    pick = energy_aware_split(costs, prof, cnn_input_bytes(cfg), pol,
+                              tx_scale=_tx_scale(cfg, masks))
+    n = len(costs)
+    assert pick.split_point == n
+    offload = next(r for r in pick.table if r["split"] == 0)
+    all_edge = next(r for r in pick.table if r["split"] == n)
+    assert offload["E_edge"] > 100 * all_edge["E_edge"]
+
+
+def _controller(setup, energy, split=0, candidates=(0, 3, 13),
+                hysteresis=0.01, dwell=1):
+    cfg, _, masks, costs, _ = setup
+    return AdaptiveSplitController(
+        costs, mcu_profile(), cnn_input_bytes(cfg),
+        AdaptivePolicy(candidates=candidates, ewma_alpha=0.5,
+                       min_samples=2, hysteresis=hysteresis, dwell=dwell),
+        split, tx_scale=_tx_scale(cfg, masks), energy=energy)
+
+
+def test_battery_exhaustion_forces_min_energy_split(setup):
+    """Draining the budget to zero maxes the urgency weight: the
+    controller must land on the candidate with minimum joules (all-edge
+    on the MCU class) and report an empty battery."""
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.05,
+                       battery_j=0.01)
+    ctl = _controller(setup, pol)
+    bw = 50e6 / 8
+    t_tx = 6000 / bw + 1e-3
+    for _ in range(4):
+        ctl.step(6000, t_tx, e_edge_j=0.004)         # 4 mJ per request
+    assert ctl.battery_j == 0.0 and ctl.battery_fraction == 0.0
+    assert ctl.history, "exhausted battery never forced a switch"
+    table = ctl.sweep(ctl.estimator.bandwidth)
+    emin = min(table, key=lambda r: r["E_edge"])
+    assert ctl.split == int(emin["split"])
+    # every switch recorded the battery level it was decided at
+    assert all(sw.battery_j is not None for sw in ctl.history)
+
+
+def test_full_battery_keeps_latency_choice(setup):
+    """With a full battery and a small static weight, the controller
+    stays at (or moves to) the latency optimum — urgency scaling only
+    kicks in as the budget drains."""
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.05,
+                       battery_j=1000.0)
+    ctl = _controller(setup, pol)
+    bw = 50e6 / 8
+    t_tx = 6000 / bw + 1e-3
+    for _ in range(4):
+        ctl.step(6000, t_tx, e_edge_j=1e-6)
+    table = ctl.sweep(ctl.estimator.bandwidth)
+    tmin = min(table, key=lambda r: r["T"])
+    assert ctl.split == int(tmin["split"])
+
+
+def test_unmetered_controller_scores_latency_only(setup):
+    ctl = _controller(setup, energy=None)
+    row = {"T": 1.0, "E_edge": 99.0}
+    assert ctl._score(row) == 1.0
+    ctl.drain(5.0)                                   # no-op, no battery
+    assert ctl.battery_j is None and ctl.battery_fraction is None
+
+
+# ---------------------------------------------------------------------------
+# plan digest semantics + session plumbing parity
+# ---------------------------------------------------------------------------
+def make_plan(setup, port=29530, **kw):
+    cfg, params, masks, _, _ = setup
+    kw.setdefault("split", 6)
+    return serving.DeploymentPlan.from_args(
+        params, cfg, masks=masks, compact=True, codec="fp32",
+        shape_link=False, port=port, **kw)
+
+
+def test_digest_stable_without_energy_section(setup):
+    plain = make_plan(setup)
+    assert "energy" not in plain.contract()
+    metered = make_plan(setup, energy=EnergyPolicy(profile=MCU_ENERGY))
+    assert "energy" in metered.contract()
+    assert plain.digest != metered.digest
+    # metering knobs are contract: a different battery → different digest
+    budget = make_plan(setup, energy=EnergyPolicy(profile=MCU_ENERGY,
+                                                  battery_j=5.0))
+    assert budget.digest != metered.digest
+    # un-metered plans are digest-identical to a freshly built twin
+    assert plain.digest == make_plan(setup).digest
+
+
+def test_energy_plan_save_load_roundtrip(setup, tmp_path):
+    pol = EnergyPolicy(profile=PI_ENERGY, energy_weight_s_per_j=2.0,
+                       battery_j=3.5)
+    plan = make_plan(setup, energy=pol)
+    loaded = serving.DeploymentPlan.load(plan.save(str(tmp_path / "d")))
+    assert loaded.digest == plan.digest
+    assert loaded.energy == pol
+
+
+def test_e_edge_j_parity_across_backends(setup):
+    """Result-dict normalization: all three backends report the same
+    key set on a metered plan, with a positive joules figure, and the
+    local figure matches the analytic split_energy row exactly (same
+    formula, same inputs)."""
+    cfg, _, masks, costs, x = setup
+    plan = make_plan(setup, port=29531,
+                     energy=EnergyPolicy(profile=MCU_ENERGY),
+                     profile=mcu_profile())
+    keysets, results = [], {}
+    local = serving.connect(plan, backend="local").infer(x)
+    results["local"] = local
+    with serving.CloudServer(plan):
+        with serving.connect(plan, backend="socket") as sess:
+            results["socket"] = sess.infer(x)
+    stream_sess = serving.connect(plan, backend="streaming",
+                                  realtime_channel=False)
+    results["streaming"] = stream_sess.infer(x)
+    for name, res in results.items():
+        assert set(res) == {"logits", "t_edge", "t_upstream", "t_total",
+                            "tx_bytes", "e_edge_j"}, name
+        assert res["e_edge_j"] is not None and res["e_edge_j"] > 0, name
+    assert (results["local"]["tx_bytes"] == results["socket"]["tx_bytes"]
+            == results["streaming"]["tx_bytes"])
+    analytic = split_energy(costs, plan.split, plan.profile, MCU_ENERGY,
+                            cnn_input_bytes(cfg),
+                            tx_scale=_tx_scale(cfg, masks)(plan.split))
+    # the measured frame carries a few tens of codec-header bytes the
+    # analytic model deliberately does not price — sub-percent here
+    assert local["e_edge_j"] == pytest.approx(analytic["E_edge"], rel=5e-3)
+
+
+def test_streaming_microbatch_energy_keeps_tx_active(setup):
+    """A micro-batched frame pays ONE RTT shared across its requests;
+    the per-request energy pricing must amortize the peeled RTT the
+    same way, so radio-active TX time stays > 0 (regression: peeling a
+    full RTT per request zeroed e_tx_j for microbatch > 1)."""
+    _, _, _, _, x = setup
+    plan = make_plan(setup, port=29532,
+                     energy=EnergyPolicy(profile=MCU_ENERGY),
+                     profile=mcu_profile())
+    sess = serving.connect(plan, backend="streaming",
+                           realtime_channel=False, microbatch=4,
+                           queue_depth=8)
+    res = sess.infer_many([x] * 16)
+    assert all(r["e_edge_j"] > 0 for r in res)
+    rtt = plan.profile.link.rtt_s
+    rep = sess.last_report
+    assert any(r["frame_n"] > 1 for r in rep.results), \
+        "stream never micro-batched; the regression path was not hit"
+    for r in rep.results:
+        assert r["t_tx_model"] - rtt / r["frame_n"] > 0, \
+            "per-request modeled TX cost fell below its RTT share"
+
+
+def test_local_session_drains_battery_and_resplits(setup):
+    """End-to-end battery story through the serving API: a metered
+    adaptive plan re-splits toward lower joules as its budget drains."""
+    cfg, params, masks, _, x = setup
+    pol = EnergyPolicy(profile=MCU_ENERGY, energy_weight_s_per_j=0.1,
+                       battery_j=0.05)
+    plan = serving.DeploymentPlan.from_args(
+        params, cfg, 0, masks=masks, compact=True, codec="fp32",
+        shape_link=False, profile=mcu_profile(), energy=pol,
+        adaptive=serving.AdaptivePolicy(candidates=(0, 3, 13),
+                                        ewma_alpha=0.5, min_samples=2,
+                                        hysteresis=0.01, dwell=2))
+    sess = serving.connect(plan, backend="local")
+    for _ in range(40):
+        res = sess.infer(x)
+        assert res["e_edge_j"] > 0
+    assert sess.switches, "battery drain never re-split"
+    for sw in sess.switches:
+        assert sw.predicted_E < sw.current_E
+    assert sess._controller.battery_j < pol.battery_j

@@ -127,7 +127,8 @@ def test_three_backends_bit_identical_logits(plan_setup):
 
     for res in (local, stream, sock):      # uniform result shape
         assert set(res) == {"logits", "t_edge", "t_upstream", "t_total",
-                            "tx_bytes"}
+                            "tx_bytes", "e_edge_j"}
+        assert res["e_edge_j"] is None     # un-metered plan: no joules
 
 
 def test_streaming_backend_reports_pipeline_stats(plan_setup):
