@@ -79,6 +79,29 @@ def write_energy_record(energy_split: Dict) -> str:
     return save_result("BENCH_energy", rec)
 
 
+def write_faults_record(fault_injection: Dict) -> str:
+    """The tracked fault-tolerance record, ``BENCH_faults.json``: one
+    flat summary per canned storm — availability (served requests,
+    fallbacks included, over total), p50/p99 request wall-clock under
+    faults, retries/fallbacks spent — plus the cloud-death drill's
+    recovery time. Written by ``benchmarks.fault_injection`` run with
+    ``--json``/``--smoke`` (the CI path) or ``benchmarks.run --json``;
+    CI uploads it next to ``BENCH_collab.json``/``BENCH_energy.json``."""
+    rec: Dict = {"bit_identical": fault_injection["bit_identical"],
+                 "n_requests_per_scenario": fault_injection["n_requests"]}
+    for row in fault_injection["rows"]:
+        s = row["scenario"]
+        rec[f"{s}_availability"] = row["availability"]
+        rec[f"{s}_p50_ms"] = row["p50_ms"]
+        rec[f"{s}_p99_ms"] = row["p99_ms"]
+        rec[f"{s}_faults"] = row["faults"]
+        rec[f"{s}_retries"] = row["retries"]
+        rec[f"{s}_fallbacks"] = row["fallbacks"]
+    rec["cloud_death_recovery_s"] = (
+        fault_injection["cloud_death"]["recovery_s"])
+    return save_result("BENCH_faults", rec)
+
+
 def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
     widths = {c: max([len(c)] + [len(_fmt(r.get(c))) for r in rows])
               for c in cols}

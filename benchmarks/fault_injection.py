@@ -1,0 +1,246 @@
+"""Fault-injection replay: availability and recovery under canned
+storms (BENCH).
+
+The paper's deployment is split inference over field Wi-Fi; real links
+drop frames, stall, tear connections down, and the cloud peer itself can
+die mid-stream. This benchmark replays the canned deterministic
+``FAULT_SCHEDULES`` storms against the real-socket backend with a
+fault-tolerant plan (CRC + sequence numbers, retries with backoff,
+edge-only fallback) and reports what the recovery machinery buys:
+
+  1. **Storm replay** — ``drop_burst`` (lossy uplink), ``stall_storm``
+     (congested AP), and ``outage`` (coverage hole) are injected on the
+     edge's data frames. Reported per storm: availability (served
+     requests, edge-fallbacks included, over total — acceptance:
+     >= 99% on the drop/stall storms), p50/p99 request wall-clock
+     *including* all retry/backoff/fallback time, and the
+     faults/retries/fallbacks spent. Every served request's logits are
+     checked bit-identical to a fault-free local run of the same plan
+     (fp32 codec: neither the split nor the recovery path changes the
+     math — an edge-fallback answer equals the collaborative answer).
+  2. **Cloud-death drill** — the ``cloud_death`` schedule kills the
+     serving process mid-response (server-side injection). The edge
+     rides it out: retries exhaust against the dead peer, the request is
+     served edge-only, a replacement cloud comes up on the same
+     endpoint, and the next requests reconnect (re-HELLO, re-RESPLIT)
+     and go collaborative again. Reported: time from the death to the
+     first clean collaborative response.
+
+``--smoke`` runs the CI-sized version; the tracked perf record
+``experiments/bench/BENCH_faults.json`` is written by ``--json`` (or by
+``benchmarks.run --json``), next to ``BENCH_collab.json`` and
+``BENCH_energy.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table, write_faults_record
+from repro import serving
+from repro.core.partition.profiles import PAPER_PROFILE
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import init_cnn_params, prunable_layers, tiny_cnn_config
+
+BASE_PORT = 29860
+SPLIT = 6
+#: client-side storms replayed over the socket backend, in order
+STORMS = ("drop_burst", "stall_storm", "outage")
+#: untimed warm-up requests per scenario (jit compile on both peers;
+#: they consume the first schedule attempts, which the canned storms
+#: leave clean)
+N_WARMUP = 2
+
+#: bench-scaled recovery contract: ms-range backoff so a whole storm
+#: replays in seconds, deadline sliced across 1+3 attempts (0.2 s
+#: per-attempt read timeout), deterministic jitter, edge fallback
+POLICY = serving.FaultPolicy(max_retries=3, backoff_base_s=0.01,
+                             backoff_max_s=0.05, backoff_jitter=0.0,
+                             request_deadline_s=0.8, fallback="edge",
+                             seed=0)
+
+
+def _setup() -> serving.DeploymentPlan:
+    cfg = tiny_cnn_config(num_classes=38, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(params, cfg,
+                                  {i: 0.5 for i in prunable_layers(cfg)})
+    return serving.DeploymentPlan.from_args(
+        params, cfg, SPLIT, masks=masks, compact=True, codec="fp32",
+        profile=PAPER_PROFILE, shape_link=False, faults=POLICY)
+
+
+def _images(n: int) -> List[np.ndarray]:
+    rng = np.random.RandomState(0)
+    return [rng.rand(1, 32, 32, 3).astype(np.float32) for _ in range(n)]
+
+
+def _reference(plan, imgs) -> List[np.ndarray]:
+    """Fault-free logits per image from the local backend — the bit
+    budget every faulted socket answer must still hit exactly."""
+    sess = serving.connect(plan, backend="local")
+    try:
+        return [sess.infer(img)["logits"] for img in imgs]
+    finally:
+        sess.close()
+
+
+def _row(name: str, n: int, served: int, lats: List[float], faults: int,
+         retries: int, fallbacks: int, mismatches: int) -> Dict:
+    return {
+        "scenario": name, "requests": n, "served": served,
+        "availability": served / n,
+        "faults": faults, "retries": retries, "fallbacks": fallbacks,
+        "mismatches": mismatches,
+        "p50_ms": float(np.percentile(lats, 50)) * 1e3 if lats else None,
+        "p99_ms": float(np.percentile(lats, 99)) * 1e3 if lats else None,
+    }
+
+
+def replay_storm(name: str, plan, imgs, ref, port: int) -> Dict:
+    """Replay one canned storm on the edge's data frames; every request
+    must come back (retried, replayed, or served edge-only) with the
+    fault-free logits, and the row records what that cost."""
+    inj = serving.FaultInjector(serving.FAULT_SCHEDULES[name])
+    with serving.CloudServer(plan, port=port) as srv:
+        sess = serving.connect(plan, backend="socket", port=port,
+                               faults=inj)
+        lats: List[float] = []
+        served = faults = retries = fallbacks = mismatches = 0
+        try:
+            for _ in range(N_WARMUP):
+                sess.infer(imgs[0])
+            for i, img in enumerate(imgs):
+                t0 = time.perf_counter()
+                try:
+                    res = sess.infer(img)
+                except Exception:               # noqa: BLE001 — counted
+                    continue                    # as unavailability
+                lats.append(time.perf_counter() - t0)
+                served += 1
+                rec = res["fault"]
+                faults += rec["faults"]
+                retries += rec["retries"]
+                fallbacks += int(rec["fallback"])
+                mismatches += int(not np.array_equal(res["logits"],
+                                                     ref[i]))
+        finally:
+            sess.close()
+    row = _row(name, len(imgs), served, lats, faults, retries, fallbacks,
+               mismatches)
+    row["injected"] = dict(inj.counts)
+    row["server_stats"] = dict(srv.fault_stats)
+    return row
+
+
+def cloud_death_drill(plan, imgs, ref, port: int) -> Dict:
+    """The ``cloud_death`` schedule kills the server mid-response; the
+    drill measures the edge's road back: fallback serves the faulted
+    request, a replacement cloud comes up, and ``recovery_s`` is the
+    wall-clock from the death to the first clean collaborative response.
+    """
+    inj = serving.FaultInjector(serving.FAULT_SCHEDULES["cloud_death"])
+    srv = serving.CloudServer(plan, port=port, faults=inj)
+    sess = serving.connect(plan, backend="socket", port=port)
+    lats: List[float] = []
+    served = faults = retries = fallbacks = mismatches = 0
+    t_death = None
+    death_request = None
+    recovery_s = None
+    try:
+        for _ in range(N_WARMUP):
+            sess.infer(imgs[0])
+        for i, img in enumerate(imgs):
+            t0 = time.perf_counter()
+            res = sess.infer(img)
+            now = time.perf_counter()
+            lats.append(now - t0)
+            served += 1
+            rec = res["fault"]
+            faults += rec["faults"]
+            retries += rec["retries"]
+            fallbacks += int(rec["fallback"])
+            mismatches += int(not np.array_equal(res["logits"], ref[i]))
+            if rec["fallback"] and t_death is None:
+                # the injected die tore the cloud down mid-response and
+                # this request was served edge-only; bring up the
+                # replacement and time the reconnect
+                t_death, death_request = now, i
+                srv.kill()
+                srv = serving.CloudServer(plan, port=port)
+            elif (t_death is not None and recovery_s is None
+                  and not rec["fallback"]):
+                recovery_s = now - t_death
+    finally:
+        sess.close()
+        srv.stop()
+    row = _row("cloud_death", len(imgs), served, lats, faults, retries,
+               fallbacks, mismatches)
+    assert t_death is not None, (
+        "cloud_death schedule never killed the server — no death to "
+        "recover from")
+    assert recovery_s is not None, (
+        "edge never returned to collaborative serving after the "
+        "replacement cloud came up")
+    return {"row": row, "death_request": death_request,
+            "recovery_s": recovery_s}
+
+
+def run(fast: bool = False) -> dict:
+    plan = _setup()
+    n = 40 if fast else 100
+    imgs = _images(n)
+    ref = _reference(plan, imgs)
+    print(plan.describe())
+
+    rows = [replay_storm(name, plan, imgs, ref, BASE_PORT + k)
+            for k, name in enumerate(STORMS)]
+    drill = cloud_death_drill(plan, imgs, ref, BASE_PORT + len(STORMS))
+    rows.append(drill["row"])
+
+    print(table(rows, ["scenario", "requests", "served", "availability",
+                       "faults", "retries", "fallbacks", "p50_ms",
+                       "p99_ms"],
+                f"{n} requests per storm, split c={SPLIT}, "
+                f"retries<={POLICY.max_retries}, "
+                f"deadline {POLICY.request_deadline_s}s, edge fallback"))
+    print(f"   cloud death at request {drill['death_request']}: back to "
+          f"collaborative serving in {drill['recovery_s'] * 1e3:.0f} ms")
+
+    by_name = {r["scenario"]: r for r in rows}
+    for name in ("drop_burst", "stall_storm"):
+        assert by_name[name]["availability"] >= 0.99, (
+            f"{name}: availability "
+            f"{by_name[name]['availability']:.3f} < 0.99", by_name[name])
+    for r in rows:
+        assert r["faults"] > 0, (
+            f"{r['scenario']}: storm injected no faults — nothing was "
+            "exercised", r)
+    bit_identical = all(r["mismatches"] == 0 for r in rows)
+    assert bit_identical, ("served logits diverged from the fault-free "
+                           "reference", rows)
+
+    out = {"n_requests": n, "split": SPLIT, "policy": POLICY.to_json(),
+           "rows": rows,
+           "cloud_death": {"death_request": drill["death_request"],
+                           "recovery_s": drill["recovery_s"]},
+           "bit_identical": bit_identical}
+    save_result("fault_injection", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests per storm)")
+    ap.add_argument("--json", action="store_true",
+                    help="write the tracked BENCH_faults.json perf record")
+    args = ap.parse_args()
+    res = run(fast=args.smoke)
+    if args.json or args.smoke:
+        # the CI smoke path owns the tracked record, like energy_split
+        print(f"perf record: {write_faults_record(res)}")

@@ -11,10 +11,11 @@ import time
 import traceback
 
 from benchmarks import (adaptive_split, cloud_batching, collab_throughput,
-                        energy_split, fig4_layerwise, fig5_methods,
-                        kernels_bench, roofline_report, table1_accuracy,
-                        table2_split_latency)
-from benchmarks.common import write_collab_record, write_energy_record
+                        energy_split, fault_injection, fig4_layerwise,
+                        fig5_methods, kernels_bench, roofline_report,
+                        table1_accuracy, table2_split_latency)
+from benchmarks.common import (write_collab_record, write_energy_record,
+                               write_faults_record)
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
@@ -24,6 +25,7 @@ BENCHES = [
     ("cloud_batching", cloud_batching.run),
     ("adaptive_split", adaptive_split.run),
     ("energy_split", energy_split.run),
+    ("fault_injection", fault_injection.run),
     ("kernels", kernels_bench.run),
     ("table1_accuracy", table1_accuracy.run),
     ("roofline", roofline_report.run),
@@ -61,6 +63,9 @@ def main() -> None:
         print(f"\nperf record: {fn}")
     if args.json and "energy_split" in results:
         print(f"perf record: {write_energy_record(results['energy_split'])}")
+    if args.json and "fault_injection" in results:
+        print("perf record: "
+              f"{write_faults_record(results['fault_injection'])}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

@@ -120,6 +120,19 @@ class BandwidthEstimator:
                       self.alpha * sample + (1 - self.alpha) * self._ewma)
         self.n_samples += 1
 
+    #: bytes/s an outage forces the estimate to — effectively "link dead"
+    #: (≈1 kbit/s) without dividing by zero anywhere downstream.
+    OUTAGE_BANDWIDTH = 125.0
+
+    def note_outage(self) -> None:
+        """Collapse the estimate to ``OUTAGE_BANDWIDTH`` (link presumed
+        dead) and mark the estimator ready, so the very next controller
+        decision sees bandwidth→0 instead of the stale pre-outage EWMA.
+        Subsequent healthy observations pull the EWMA back up at the
+        usual ``alpha`` rate — that is the heal-back path."""
+        self._ewma = self.OUTAGE_BANDWIDTH
+        self.n_samples = max(self.n_samples, self.min_samples)
+
     @property
     def ready(self) -> bool:
         return self.n_samples >= self.min_samples
@@ -254,6 +267,20 @@ class AdaptiveSplitController:
         self.drain(e_edge_j)
         self.n_requests += 1
         self._since_switch += 1
+
+    def note_outage(self) -> Optional[SplitSwitch]:
+        """React to a cloud outage (a request that fell back to
+        edge-only after exhausting its retry budget): collapse the
+        bandwidth estimate to ~zero, waive the dwell guard, and decide
+        immediately — on a dead uplink the sweep's T_TX term dominates
+        every offloading candidate, so the winner is the latest
+        candidate split (c=N when armed: pure edge, zero wire bytes).
+        Healing is symmetric: once requests flow again, their healthy
+        uplink observations pull the EWMA back up and ``step`` re-splits
+        toward offloading through the normal hysteresis/dwell guards."""
+        self.estimator.note_outage()
+        self._since_switch = self.policy.dwell
+        return self.maybe_switch()
 
     def note_external_switch(self, split: int) -> None:
         """Adopt a split executed outside the controller (a manual

@@ -155,6 +155,8 @@ class LaneStats:
     batches: int = 0              # cloud calls
     padded_rows: int = 0          # zero rows added to reach the bucket
     busy_s: float = 0.0           # wall time inside the jitted cloud call
+    failed_rows: int = 0          # rows whose future resolved to an error
+    cancelled_frames: int = 0     # frames cancelled at drain/stop
     batch_sizes: "deque" = field(
         default_factory=lambda: deque(maxlen=256))
 
@@ -174,6 +176,8 @@ class LaneStats:
         return {"lane": list(map(str, self.lane)), "rows": self.rows,
                 "frames": self.frames, "batches": self.batches,
                 "padded_rows": self.padded_rows, "busy_s": self.busy_s,
+                "failed_rows": self.failed_rows,
+                "cancelled_frames": self.cancelled_frames,
                 "avg_batch": self.avg_batch,
                 "padding_waste": self.padding_waste,
                 "batch_sizes": list(self.batch_sizes)[-64:]}
@@ -287,6 +291,34 @@ class DynamicBatcher:
             return batch
 
     def _scheduler(self, ln: _Lane) -> None:
+        # a lane thread must never die with futures still queued — a
+        # crash anywhere (collect, concatenate, bank build) fails every
+        # request waiting on this lane instead of leaving them pending
+        try:
+            self._scheduler_loop(ln)
+        except Exception as e:                           # noqa: BLE001
+            self._fail_lane(ln, e)
+
+    def _fail_lane(self, ln: _Lane, exc: Exception) -> None:
+        """Resolve everything still queued on a crashed lane with
+        ``exc`` — no request may wait forever on a dead scheduler."""
+        items = []
+        if ln.carry is not None:
+            items.append(ln.carry)
+            ln.carry = None
+        while True:
+            try:
+                item = ln.q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                items.append(item)
+        for _, n, fut in items:
+            if not fut.done():
+                fut.set_exception(exc)
+                ln.stats.failed_rows += n
+
+    def _scheduler_loop(self, ln: _Lane) -> None:
         split = ln.key[0]
         while not self._stop.is_set():
             batch = self._collect(ln)
@@ -304,9 +336,10 @@ class DynamicBatcher:
                     self.invoke_cost(split, bucket)
                 dt = time.perf_counter() - t0
             except Exception as e:                       # noqa: BLE001
-                for _, _, fut in batch:
+                for _, n, fut in batch:
                     if not fut.done():
                         fut.set_exception(e)
+                        ln.stats.failed_rows += n
                 continue
             st = ln.stats
             st.rows += rows
@@ -333,19 +366,36 @@ class DynamicBatcher:
             if ln.thread is not None:
                 ln.thread.join(timeout)
         for ln in lanes:
-            if ln.carry is not None and not ln.carry[2].done():
-                ln.carry[2].cancel()
+            if ln.carry is not None:
+                if not ln.carry[2].done() and ln.carry[2].cancel():
+                    ln.stats.cancelled_frames += 1
+                ln.carry = None
             while True:
                 try:
                     item = ln.q.get_nowait()
                 except queue.Empty:
                     break
                 if item is not None and not item[2].done():
-                    item[2].cancel()
+                    if item[2].cancel():
+                        ln.stats.cancelled_frames += 1
+
+    def pending(self) -> int:
+        """Frames still sitting in lane queues (carry slots included) —
+        0 after a drain, or the leak count the fault tests assert on."""
+        with self._lock:
+            lanes = list(self._lanes.values())
+        return sum(ln.q.qsize() + (1 if ln.carry is not None else 0)
+                   for ln in lanes)
 
     def stats(self) -> Dict[str, Dict]:
         """Per-lane accounting, JSON-ready, keyed by the lane tuple's
-        string form."""
+        string form; each record also carries the lane's live ``pending``
+        queue depth (0 on a drained engine)."""
         with self._lock:
-            return {str(k): ln.stats.to_json()
-                    for k, ln in self._lanes.items()}
+            out = {}
+            for k, ln in self._lanes.items():
+                rec = ln.stats.to_json()
+                rec["pending"] = ln.q.qsize() + (
+                    1 if ln.carry is not None else 0)
+                out[str(k)] = rec
+            return out

@@ -13,6 +13,13 @@ cost), while ``ShapedSocket`` refills its token bucket at whatever rate
 the trace dictates at the current wall-clock offset. The per-send cost is
 therefore a *measurement* of the link as it is right now — the signal the
 adaptive split controller estimates bandwidth from.
+
+Both channels also accept a ``FaultInjector`` replaying a deterministic
+``FaultSchedule`` (``repro.core.partition.profiles``): ``SimChannel``
+charges lost copies and ARQ retransmissions against the virtual clock,
+while ``ShapedSocket`` drops, corrupts, stalls, or tears down real
+frames on the wire — the reproducible storm the recovery machinery in
+``repro.core.collab.faults`` and ``EdgeClient`` is tested against.
 """
 from __future__ import annotations
 
@@ -20,9 +27,10 @@ import socket
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
-from repro.core.partition.profiles import LinkProfile, LinkTrace
+from repro.core.partition.profiles import (FaultEvent, FaultSchedule,
+                                           LinkProfile, LinkTrace)
 
 
 def recv_exact(sock: socket.socket, n: int, chunk: int = 1 << 20) -> bytes:
@@ -41,6 +49,86 @@ def recv_exact(sock: socket.socket, n: int, chunk: int = 1 << 20) -> bytes:
     return bytes(out)
 
 
+def corrupt_bytes(data: bytes, index: Optional[int] = None) -> bytes:
+    """Flip one byte of ``data`` (the middle byte by default).
+
+    Deterministic by design — the corrupt-frame tests assert that the
+    CRC layer catches *this exact* flip, not a random one.
+    """
+    if not data:
+        return data
+    i = len(data) // 2 if index is None else index
+    return data[:i] + bytes([data[i] ^ 0xFF]) + data[i + 1:]
+
+
+class FaultInjector:
+    """Replays a ``FaultSchedule`` against a live attempt counter.
+
+    The schedule is pure data; the injector owns the mutable state — a
+    thread-safe, monotonically increasing transmission-attempt index and
+    per-kind fault counts. One injector drives one run; build a fresh
+    one to replay the same schedule again.
+    """
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self._lock = threading.Lock()
+        self._attempt = 0
+        self.counts: Dict[str, int] = {}
+
+    def next_event(self) -> Optional[FaultEvent]:
+        """Consume one transmission attempt; the fault to inject on it,
+        or None for a clean attempt."""
+        with self._lock:
+            ev = self.schedule.event_at(self._attempt)
+            self._attempt += 1
+            if ev is not None:
+                self.counts[ev.kind] = self.counts.get(ev.kind, 0) + 1
+            return ev
+
+    @property
+    def attempts(self) -> int:
+        """Transmission attempts consumed so far."""
+        with self._lock:
+            return self._attempt
+
+    @property
+    def injected(self) -> int:
+        """Total faults injected so far (all kinds)."""
+        with self._lock:
+            return sum(self.counts.values())
+
+    def reset(self) -> None:
+        """Rewind to attempt 0 and clear the per-kind counts."""
+        with self._lock:
+            self._attempt = 0
+            self.counts = {}
+
+
+def apply_send_fault(ev: FaultEvent, data: bytes,
+                     sock: Optional[socket.socket]) -> Optional[bytes]:
+    """Apply one injected fault to an outgoing frame.
+
+    Returns the (possibly corrupted) bytes to put on the wire, or None
+    when the frame is dropped. ``disconnect``/``die`` close ``sock``
+    and raise ``ConnectionResetError`` — exactly what a torn-down TCP
+    connection surfaces to the sender.
+    """
+    if ev.kind == "drop":
+        return None
+    if ev.kind == "corrupt":
+        return corrupt_bytes(data)
+    if ev.kind == "stall":
+        time.sleep(ev.stall_s)
+        return data
+    if sock is not None:
+        try:
+            sock.close()
+        except OSError:
+            pass
+    raise ConnectionResetError(f"injected fault: {ev.kind}")
+
+
 @dataclass
 class SimChannel:
     """Analytic byte channel with an optional time-varying link.
@@ -50,12 +138,20 @@ class SimChannel:
     current clock, and ``advance`` moves the clock across non-transmission
     time (edge/cloud compute) so the link keeps degrading while the radio
     is idle. Without a trace this is the original fixed-``link`` channel.
+
+    With ``faults`` set, each ``send`` consults the injector: a lost copy
+    (drop/corrupt/disconnect — the analytic channel models link-layer
+    ARQ) burns a full transmission's airtime and is retransmitted on the
+    next attempt index; a stall adds its delay. ``last_send_events``
+    records what the most recent ``send`` suffered.
     """
     link: LinkProfile
     realtime: bool = False
     trace: Optional[LinkTrace] = None
     sent_bytes: int = 0
     elapsed_s: float = 0.0
+    faults: Optional[FaultInjector] = None
+    last_send_events: Tuple[str, ...] = ()
 
     def link_now(self) -> LinkProfile:
         """The link state at the current virtual clock."""
@@ -84,13 +180,30 @@ class SimChannel:
             now += dt
         return t
 
-    def send(self, nbytes: int) -> float:
+    def _one_send(self, nbytes: int) -> float:
         if self.trace is None:
             t = nbytes / self.link.bandwidth + self.link.rtt_s
         else:
             t = self._trace_send_time(nbytes)
         self.sent_bytes += nbytes
         self.elapsed_s += t
+        return t
+
+    def send(self, nbytes: int) -> float:
+        events = []
+        t = 0.0
+        if self.faults is not None:
+            ev = self.faults.next_event()
+            while ev is not None:
+                events.append(ev.kind)
+                if ev.kind == "stall":
+                    self.elapsed_s += ev.stall_s
+                    t += ev.stall_s
+                    break               # delayed, then delivered
+                t += self._one_send(nbytes)   # lost copy burns airtime ...
+                ev = self.faults.next_event()  # ... retransmit = new attempt
+        t += self._one_send(nbytes)
+        self.last_send_events = tuple(events)
         if self.realtime:
             time.sleep(t)
         return t
@@ -161,16 +274,23 @@ class ShapedSocket:
     token bucket deliberately lets small frames burst through unpaced — so
     the adaptive estimator reads this modeled cost instead, which tracks
     whatever the (possibly trace-driven) shaper is currently enforcing.
+
+    With ``faults`` set, every ``sendall`` consults the injector (each
+    serving-stack ``sendall`` is exactly one wire frame): the frame may
+    be dropped, corrupted, stalled, or the socket torn down mid-stream
+    (``ConnectionResetError``) — see ``apply_send_fault``.
     """
 
     def __init__(self, sock: socket.socket, link: LinkProfile,
                  chunk: int = 16384, trace: Optional[LinkTrace] = None,
-                 shaper: Optional[LinkShaper] = None):
+                 shaper: Optional[LinkShaper] = None,
+                 faults: Optional[FaultInjector] = None):
         self.sock = sock
         self.shaper = shaper or LinkShaper(link, trace=trace)
         self.link = self.shaper.link
         self.chunk = chunk
         self.trace = self.shaper.trace
+        self.faults = faults
         self.last_send_cost_s = 0.0
 
     def _state(self, now: float):
@@ -178,6 +298,14 @@ class ShapedSocket:
         return self.shaper.state(now)
 
     def sendall(self, data: bytes) -> None:
+        if self.faults is not None:
+            ev = self.faults.next_event()
+            if ev is not None:
+                maybe = apply_send_fault(ev, data, self.sock)
+                if maybe is None:             # frame lost in flight
+                    self.last_send_cost_s = 0.0
+                    return
+                data = maybe
         cost, rtt = 0.0, 0.0
         for i in range(0, len(data), self.chunk):
             piece = data[i:i + self.chunk]

@@ -48,10 +48,30 @@ peers swap their jitted sub-models *without reconnecting* (the cloud's
     version u16  (protocol version)
     status  u8   (0 = ok, 1 = split rejected — reply only)
     split   u16  (the proposed / acknowledged split point)
+
+SEALED frame (``encode_sealed``) — integrity envelope around any data
+frame, negotiated via the HELLO capability byte (``CAP_CRC``): a sealed
+frame carries a request sequence number (u32, wraps) and the CRC32 of
+the inner frame, so truncation and in-flight corruption surface as a
+typed ``FrameIntegrityError`` instead of silently-wrong tensors, and a
+reconnecting edge can replay an in-flight request and match the reply
+by sequence number. Control frames (HELLO/RESPLIT/heartbeat) are never
+sealed:
+    magic   u32  = 0x46514553 ("SEQF")
+    seq     u32  (request sequence number, wraps at 2**32)
+    crc     u32  (CRC32 of the inner frame bytes)
+    inner   the wrapped data frame (REPR / REPF / ...)
+
+HEARTBEAT frame (``encode_heartbeat``) — one-way keepalive from edge to
+cloud (no reply); a cloud serving a plan with a ``FaultPolicy`` whose
+``heartbeat_s`` is set reaps clients idle for several intervals:
+    magic   u32  = 0x42545248 ("HRTB")
+    version u16  (protocol version)
 """
 from __future__ import annotations
 
 import struct
+import zlib
 from typing import BinaryIO, Dict, Optional, Tuple
 
 import numpy as np
@@ -60,11 +80,17 @@ MAGIC = 0x52455052
 FEATURE_MAGIC = 0x46504552
 HELLO_MAGIC = 0x4F4C4548
 RESPLIT_MAGIC = 0x4C505352
+SEALED_MAGIC = 0x46514553
+HEARTBEAT_MAGIC = 0x42545248
 PROTOCOL_VERSION = 1
+#: HELLO capability bit: peer understands sealed (CRC32 + seq) frames
+CAP_CRC = 1
 _HDR = struct.Struct("<II16s")
 _FHDR = struct.Struct("<IBBH")
 _HELLO = struct.Struct("<IHBB")
 _RESPLIT = struct.Struct("<IHBH")
+_SEALED = struct.Struct("<III")
+_HEARTBEAT = struct.Struct("<IH")
 
 
 class PlanMismatchError(ConnectionError):
@@ -72,6 +98,14 @@ class PlanMismatchError(ConnectionError):
     contract (plan digest): split point, compaction, codec, or model shape.
     Raised by the HELLO handshake instead of letting the peers exchange
     undecodable / silently-wrong feature tensors."""
+
+
+class FrameIntegrityError(ConnectionError):
+    """A sealed frame failed its CRC32 check — the payload was corrupted
+    or truncated in flight. Raised by ``decode_sealed`` instead of
+    letting a flipped byte decode into silently-wrong tensors; the
+    receiving peer treats the connection as compromised and the edge
+    client retries the request on a fresh connection."""
 
 CODEC_IDS = {"fp32": 0, "fp16": 1, "int8": 2}
 CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
@@ -206,12 +240,22 @@ def decode_feature(buf: bytes) -> Tuple[np.ndarray, int]:
 # HELLO handshake (deployment-contract digest exchange)
 # ---------------------------------------------------------------------------
 def encode_hello(digest: str, status: int = 0,
-                 version: int = PROTOCOL_VERSION) -> bytes:
-    """Handshake frame carrying a plan digest (ascii hex, <= 255 chars)."""
+                 version: int = PROTOCOL_VERSION, caps: int = 0) -> bytes:
+    """Handshake frame carrying a plan digest (ascii hex, <= 255 chars).
+
+    ``caps`` is an optional capability bitmask (``CAP_CRC`` => the peer
+    speaks sealed CRC32+seq frames), appended as a single trailing byte
+    only when non-zero. Legacy decoders slice the digest by ``dlen`` and
+    ignore trailing bytes, so a caps-bearing HELLO is fully backward
+    compatible — a legacy peer simply reads it as caps=0.
+    """
     d = digest.encode("ascii")
     if len(d) > 255:
         raise ValueError("digest too long for HELLO frame")
-    return _HELLO.pack(HELLO_MAGIC, version, status, len(d)) + d
+    if not 0 <= caps <= 0xFF:
+        raise ValueError("caps must fit one byte")
+    tail = struct.pack("<B", caps) if caps else b""
+    return _HELLO.pack(HELLO_MAGIC, version, status, len(d)) + d + tail
 
 
 def decode_hello(buf: bytes) -> Tuple[str, int, int]:
@@ -221,6 +265,16 @@ def decode_hello(buf: bytes) -> Tuple[str, int, int]:
         raise ValueError("bad HELLO-frame magic")
     digest = buf[_HELLO.size:_HELLO.size + dlen].decode("ascii")
     return digest, status, version
+
+
+def hello_caps(buf: bytes) -> int:
+    """Capability bitmask of a HELLO frame; 0 for a legacy frame that
+    carries no caps byte (pre-fault-tolerance peers)."""
+    magic, _, _, dlen = _HELLO.unpack_from(buf, 0)
+    if magic != HELLO_MAGIC:
+        raise ValueError("bad HELLO-frame magic")
+    off = _HELLO.size + dlen
+    return buf[off] if len(buf) > off else 0
 
 
 def is_hello(buf: bytes) -> bool:
@@ -255,8 +309,57 @@ def is_resplit(buf: bytes) -> bool:
             and struct.unpack_from("<I", buf, 0)[0] == RESPLIT_MAGIC)
 
 
+# ---------------------------------------------------------------------------
+# sealed frames (CRC32 + sequence number) and heartbeat keepalive
+# ---------------------------------------------------------------------------
+def encode_sealed(seq: int, inner: bytes) -> bytes:
+    """Wrap a data frame in an integrity envelope: sequence number plus
+    CRC32 of the inner bytes. The cloud echoes ``seq`` on its (sealed)
+    response, letting a reconnecting edge replay an in-flight request
+    and discard stale replies."""
+    crc = zlib.crc32(inner) & 0xFFFFFFFF
+    return _SEALED.pack(SEALED_MAGIC, seq & 0xFFFFFFFF, crc) + inner
+
+
+def decode_sealed(buf: bytes) -> Tuple[int, bytes]:
+    """Unwrap a sealed frame -> (seq, inner frame bytes).
+
+    Raises ``FrameIntegrityError`` when the CRC32 does not match —
+    corruption or truncation happened between the peers.
+    """
+    magic, seq, crc = _SEALED.unpack_from(buf, 0)
+    if magic != SEALED_MAGIC:
+        raise ValueError("bad sealed-frame magic")
+    inner = bytes(buf[_SEALED.size:])
+    if zlib.crc32(inner) & 0xFFFFFFFF != crc:
+        raise FrameIntegrityError(
+            f"sealed frame seq={seq} failed CRC32 check "
+            f"({len(inner)} inner bytes)")
+    return seq, inner
+
+
+def is_sealed(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a sealed envelope."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == SEALED_MAGIC)
+
+
+def encode_heartbeat(version: int = PROTOCOL_VERSION) -> bytes:
+    """One-way keepalive frame (edge -> cloud, no reply expected)."""
+    return _HEARTBEAT.pack(HEARTBEAT_MAGIC, version)
+
+
+def is_heartbeat(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a heartbeat keepalive."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == HEARTBEAT_MAGIC)
+
+
 def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:
-    """Dispatch on the frame magic: raw tensor frame or codec frame."""
+    """Dispatch on the frame magic: raw tensor frame or codec frame
+    (sealed envelopes are unwrapped — and CRC-checked — first)."""
+    if is_sealed(buf):
+        _, buf = decode_sealed(buf)
     (magic,) = struct.unpack_from("<I", buf, 0)
     if magic == FEATURE_MAGIC:
         return decode_feature(buf)
@@ -269,7 +372,10 @@ def frame_lane(buf: bytes) -> str:
     with ``"+packed"`` appended when channel packing is on. The dynamic
     batching engine keys its per-lane queues on this (frames that took
     different wire paths are batched separately, so per-lane accounting
-    stays attributable per encoding)."""
+    stays attributable per encoding). Sealed envelopes are unwrapped
+    first — the lane is a property of the inner data frame."""
+    if is_sealed(buf):
+        _, buf = decode_sealed(buf)
     (magic,) = struct.unpack_from("<I", buf, 0)
     if magic != FEATURE_MAGIC:
         return "raw"

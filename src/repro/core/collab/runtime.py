@@ -65,6 +65,7 @@ import socket
 import struct
 import threading
 import time
+from concurrent.futures import CancelledError, Future
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -75,15 +76,22 @@ import numpy as np
 from repro.configs.base import CNNConfig
 from repro.core.collab.batching import (BatchingPolicy, DynamicBatcher,
                                         next_pow2_bucket, pad_rows)
-from repro.core.collab.channel import (LinkShaper, ShapedSocket, SimChannel,
-                                       recv_exact)
-from repro.core.collab.protocol import (CODEC_TX_SCALE, PROTOCOL_VERSION,
+from repro.core.collab.channel import (FaultInjector, LinkShaper,
+                                       ShapedSocket, SimChannel,
+                                       apply_send_fault, recv_exact)
+from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
+                                      fault_record)
+from repro.core.collab.protocol import (CAP_CRC, CODEC_TX_SCALE,
+                                        PROTOCOL_VERSION,
+                                        FrameIntegrityError,
                                         PlanMismatchError, decode_any,
                                         decode_hello, decode_resplit,
-                                        decode_tensor, encode_feature,
+                                        decode_sealed, decode_tensor,
+                                        encode_feature, encode_heartbeat,
                                         encode_hello, encode_resplit,
-                                        encode_tensor, frame_lane, is_hello,
-                                        is_resplit)
+                                        encode_sealed, encode_tensor,
+                                        frame_lane, hello_caps, is_heartbeat,
+                                        is_hello, is_resplit, is_sealed)
 from repro.core.partition.profiles import (LinkProfile, LinkTrace,
                                            TwoTierProfile)
 from repro.models.cnn import (cnn_apply, compact_params, split_keep_indices)
@@ -298,7 +306,7 @@ class CollabRunner:
                  simulate_compute: bool = True,
                  compact: bool = False, codec: Optional[str] = None,
                  pack: bool = False, trace: Optional[LinkTrace] = None,
-                 energy=None):
+                 energy=None, faults: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.split = split
         self.profile = profile
@@ -307,7 +315,7 @@ class CollabRunner:
         self.compact = compact
         self.pack = pack
         self.channel = SimChannel(profile.link, realtime=realtime_channel,
-                                  trace=trace)
+                                  trace=trace, faults=faults)
         self.simulate_compute = simulate_compute
         #: optional ``EnergyProfile`` — when set, every RequestTiming
         #: carries ``e_edge_j`` (joules) priced from the same breakdown
@@ -401,8 +409,15 @@ class CollabRunner:
                                   self._analytic["T_S"], tx_bytes)
         else:
             timing = self._timing(t1 - t0, t_tx, t3 - t2, tx_bytes)
+        # ARQ accounting from the channel: lost copies were retransmitted
+        # by the modeled link layer, so the request was still served
+        evs = (self.channel.last_send_events
+               if self._cloud_fn is not None else ())
         return {"logits": np.asarray(out), "timing": timing,
-                "wallclock": {"edge": t1 - t0, "cloud": t3 - t2}}
+                "wallclock": {"edge": t1 - t0, "cloud": t3 - t2},
+                "fault": fault_record(
+                    faults=len(evs),
+                    retries=sum(1 for e in evs if e != "stall"))}
 
     def infer_batch(self, images: Sequence[np.ndarray],
                     bucket: Optional[int] = None) -> List[Dict]:
@@ -445,14 +460,15 @@ class CollabRunner:
             self.channel.advance(self._analytic["T_D"] if
                                  self.simulate_compute else t1 - t0)
         feats_np = np.asarray(feats)
-        per_req: List[Tuple[int, float]] = []
+        per_req: List[Tuple[int, float, Tuple[str, ...]]] = []
         if cloud_b is not None:
             decoded_frames = []
             for i in range(n):           # one frame per request, as infer()
                 frame = feats_np[offs[i]:offs[i] + counts[i]]
                 buf = self._encode(frame)
                 t_tx = self.channel.send(len(buf))
-                per_req.append((len(buf), t_tx))
+                per_req.append((len(buf), t_tx,
+                                self.channel.last_send_events))
                 decoded_frames.append(decode_any(buf)[0]
                                       if (self.codec is not None
                                           or self._keep is not None)
@@ -464,7 +480,7 @@ class CollabRunner:
             jax.block_until_ready(out)
             t3 = time.perf_counter()
         else:
-            per_req = [(0, 0.0)] * n
+            per_req = [(0, 0.0, ())] * n
             t2 = t3 = time.perf_counter()
             out = feats
         if self.channel.trace is not None:
@@ -473,7 +489,7 @@ class CollabRunner:
         out = np.asarray(out)
         results = []
         for i in range(n):
-            nbytes, t_tx = per_req[i]
+            nbytes, t_tx, evs = per_req[i]
             if self.simulate_compute:
                 timing = self._timing(self._analytic["T_D"], t_tx,
                                       self._analytic["T_S"], nbytes)
@@ -483,7 +499,11 @@ class CollabRunner:
             results.append({"logits": out[offs[i]:offs[i] + counts[i]],
                             "timing": timing,
                             "wallclock": {"edge": t1 - t0,
-                                          "cloud": t3 - t2}})
+                                          "cloud": t3 - t2},
+                            "fault": fault_record(
+                                faults=len(evs),
+                                retries=sum(1 for e in evs
+                                            if e != "stall"))})
         return results
 
 
@@ -502,7 +522,11 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 trace: Optional[LinkTrace] = None,
                 batching: Optional[BatchingPolicy] = None,
                 batch_stats: Optional[Dict] = None,
-                simulate_server=None) -> None:
+                simulate_server=None,
+                fault_policy: Optional[FaultPolicy] = None,
+                faults: Optional[FaultInjector] = None,
+                fault_stats: Optional[Dict] = None,
+                die: Optional[threading.Event] = None) -> None:
     """Cloud-side loop: accept edge connections, answer frames.
 
     A threaded accept loop serves each connection in its own handler
@@ -562,6 +586,25 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     host's core count (on which N real batch-1 calls may parallelize in
     ways the target device cannot). Real compute still runs first, so
     logits and bit-identity are unaffected.
+
+    Fault tolerance: an edge whose HELLO advertises ``CAP_CRC`` gets
+    sealed (CRC32 + sequence-number) data frames both ways — a
+    corrupted request surfaces as ``FrameIntegrityError`` and closes
+    the connection (the edge retries on a fresh one), and every data
+    response echoes the request's sequence number so a reconnecting
+    edge can replay and match. ``fault_policy`` (the plan's ``faults``
+    section) arms idle-client reaping: a connection silent for
+    ``3 * heartbeat_s`` is closed (edges send HEARTBEAT keepalives
+    between requests to stay alive). Setting ``stop`` now performs a
+    *graceful drain* — handlers stop reading but flush every queued /
+    batched response before closing — while the ``die`` event is the
+    crash lever (connections dropped mid-frame, for fault drills).
+    ``faults`` injects the schedule's faults into this server's *data
+    responses* (drop/corrupt/stall/disconnect, plus ``die`` = kill the
+    whole server); ``fault_stats`` (a dict) receives classified error
+    counters (``reaped_conns``, ``integrity_errors``, ``conn_errors``,
+    ``bad_frames``, ``writer_errors``, ``abandoned_futures``,
+    ``heartbeats``) at shutdown.
     """
     bank = SplitFnBank(params, cfg, masks, compact)
     charge = None
@@ -590,6 +633,14 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                   buckets=batching.resolved_buckets if batching else (1,),
                   cloud_only=True)
     shaper = LinkShaper(link, trace=trace) if link or trace else None
+    _die = die if die is not None else threading.Event()
+    stats_lock = threading.Lock()
+
+    def _count(key: str, n: int = 1) -> None:
+        if fault_stats is None:
+            return
+        with stats_lock:
+            fault_stats[key] = fault_stats.get(key, 0) + n
 
     def _handle(conn: socket.socket, rec: Dict) -> None:
         ch = (ShapedSocket(conn, link, trace=trace, shaper=shaper)
@@ -598,12 +649,33 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
         cur_split = split
         _, cloud_fn, _ = bank.get(cur_split)
         served = 0
+        # idle-client reaping: with a heartbeat interval armed, a client
+        # silent for several intervals is presumed dead and its slot is
+        # reclaimed (socket.timeout below)
+        if fault_policy is not None and fault_policy.heartbeat_s > 0:
+            conn.settimeout(3.0 * fault_policy.heartbeat_s)
+
+        def _inject(frame: bytes) -> Optional[bytes]:
+            """Server-side fault injection on one outgoing data frame."""
+            if faults is None:
+                return frame
+            ev = faults.next_event()
+            if ev is None:
+                return frame
+            if ev.kind == "die":
+                # the cloud process is killed: stop accepting, and the
+                # accept loop hard-drops every connection mid-frame
+                _die.set()
+                if stop is not None:
+                    stop.set()
+                raise ConnectionResetError("injected fault: die")
+            return apply_send_fault(ev, frame, conn)
+
         # -- in-order response pipeline (batching mode) ---------------------
         # The handler thread keeps reading frames and submitting them to
-        # the batcher; this writer drains (future | bytes) items in
-        # arrival order, so responses never reorder even though batches
-        # complete asynchronously. Control-frame replies enter the same
-        # queue as raw bytes to preserve ordering.
+        # the batcher; this writer drains ("ctl", bytes) and ("data",
+        # seq, future|bytes) items in arrival order, so responses never
+        # reorder even though batches complete asynchronously.
         resp_q: Optional[queue.Queue] = queue.Queue() if engine else None
 
         def _writer() -> None:
@@ -612,14 +684,31 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     item = resp_q.get()
                     if item is None:
                         return
-                    if isinstance(item, bytes):
-                        tx(struct.pack("<Q", len(item)) + item)
+                    if item[0] == "ctl":
+                        tx(struct.pack("<Q", len(item[1])) + item[1])
                         continue
-                    out = encode_tensor(np.asarray(item.result()))
-                    tx(struct.pack("<Q", len(out)) + out)
-            except Exception:                            # noqa: BLE001
+                    _, seq, val = item
+                    payload = (encode_tensor(np.asarray(val.result()))
+                               if isinstance(val, Future) else val)
+                    frame = (encode_sealed(seq, payload)
+                             if seq is not None else payload)
+                    frame = _inject(frame)
+                    if frame is None:
+                        continue             # injected drop
+                    tx(struct.pack("<Q", len(frame)) + frame)
+            except (EOFError, ConnectionError, OSError):
+                _count("conn_errors")
                 try:
                     conn.shutdown(socket.SHUT_RDWR)      # unblock reader
+                except OSError:
+                    pass
+            except (CancelledError, Exception):          # noqa: BLE001
+                # a batch failed (or was cancelled at drain): there is no
+                # payload to answer with — drop the connection so the
+                # edge retries on a fresh one, and record why
+                _count("writer_errors")
+                try:
+                    conn.shutdown(socket.SHUT_RDWR)
                 except OSError:
                     pass
 
@@ -628,22 +717,43 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
             writer = threading.Thread(target=_writer, daemon=True)
             writer.start()
 
-        def _respond(payload: bytes) -> None:
+        def _respond_ctl(payload: bytes) -> None:
             if resp_q is not None:
-                resp_q.put(payload)
+                resp_q.put(("ctl", payload))
             else:
                 tx(struct.pack("<Q", len(payload)) + payload)
+
+        def _respond_data(payload: bytes, seq: Optional[int]) -> None:
+            if resp_q is not None:
+                resp_q.put(("data", seq, payload))
+                return
+            frame = (encode_sealed(seq, payload)
+                     if seq is not None else payload)
+            frame = _inject(frame)
+            if frame is not None:
+                tx(struct.pack("<Q", len(frame)) + frame)
 
         try:
             while max_requests is None or served < max_requests:
                 (n,) = struct.unpack("<Q", rx(8))
                 buf = rx(n)
+                if is_heartbeat(buf):
+                    _count("heartbeats")    # keepalive only: not a request
+                    continue
+                seq: Optional[int] = None
+                if is_sealed(buf):
+                    seq, buf = decode_sealed(buf)   # CRC-checked
                 if is_hello(buf):
                     peer, _, pver = decode_hello(buf)
+                    peer_caps = hello_caps(buf)
                     ok = (pver == PROTOCOL_VERSION
                           and (plan_digest is None or peer == plan_digest))
-                    _respond(encode_hello(plan_digest or "",
-                                          status=0 if ok else 1))
+                    # capability echo: sealed frames are armed only when
+                    # BOTH peers advertise CAP_CRC (legacy edges send no
+                    # caps byte and keep the unsealed wire format)
+                    _respond_ctl(encode_hello(
+                        plan_digest or "", status=0 if ok else 1,
+                        caps=CAP_CRC if peer_caps & CAP_CRC else 0))
                     if not ok:
                         return              # contract mismatch: fail fast
                     rec["claimed"] = True   # handshake is not a request
@@ -657,15 +767,16 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     if ok:
                         cur_split = want
                         _, cloud_fn, _ = bank.get(want)
-                    _respond(encode_resplit(want, status=0 if ok else 1))
+                    _respond_ctl(encode_resplit(want, status=0 if ok else 1))
                     rec["claimed"] = True   # control frame, not a request
                     continue
                 arr, _ = decode_any(buf)
                 rows = int(np.asarray(arr).shape[0]) if arr.ndim else 1
                 if (engine is not None and cur_split < bank.n_layers
                         and rows <= batching.max_batch):
-                    resp_q.put(engine.submit(cur_split, frame_lane(buf),
-                                             np.asarray(arr)))
+                    resp_q.put(("data", seq,
+                                engine.submit(cur_split, frame_lane(buf),
+                                              np.asarray(arr))))
                 else:
                     # no engine, c=N passthrough, or a frame wider than
                     # any bucket — serve it exactly like the unbatched
@@ -675,15 +786,42 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                         else arr)  # c=N: edge sent the logits
                     if charge is not None and cloud_fn is not None:
                         charge(cur_split, rows)
-                    _respond(encode_tensor(logits))
+                    _respond_data(encode_tensor(logits), seq)
                 served += 1
                 rec["claimed"] = True
-        except (EOFError, OSError):
-            pass
+        except FrameIntegrityError:
+            # corrupted/truncated request frame: the stream can no longer
+            # be trusted — close; the edge retries on a fresh connection
+            _count("integrity_errors")
+        except socket.timeout:
+            _count("reaped_conns")          # idle past the heartbeat window
+        except (EOFError, ConnectionError, OSError):
+            _count("conn_errors")           # peer went away mid-stream
+        except ValueError:
+            _count("bad_frames")            # garbage magic / header
         finally:
             if writer is not None:
                 resp_q.put(None)
                 writer.join(timeout=30)
+                # fail anything the dead writer left behind: a future
+                # still pending is cancelled (its edge will retry), a
+                # failed one is observed so it never warns unretrieved
+                leaked = 0
+                while True:
+                    try:
+                        item = resp_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if (item is not None and item[0] == "data"
+                            and isinstance(item[2], Future)):
+                        fut = item[2]
+                        if not fut.done():
+                            fut.cancel()
+                            leaked += 1
+                        elif not fut.cancelled():
+                            fut.exception()
+                if leaked:
+                    _count("abandoned_futures", leaked)
             conn.close()
 
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -702,7 +840,7 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     done_ok = 0
     try:
         while True:
-            if stop is not None and stop.is_set():
+            if (stop is not None and stop.is_set()) or _die.is_set():
                 break
             live = []
             for w, c, rec in pending:
@@ -730,10 +868,22 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
             pending.append((w, conn, rec))
     finally:
         srv.close()
-        if stop is not None and stop.is_set():
-            for _, c, _ in pending:      # unblock handlers mid-recv
+        if _die.is_set():
+            # crash semantics: drop every connection mid-frame (the
+            # fault drills' "cloud process death")
+            for _, c, _ in pending:
                 try:
                     c.close()
+                except OSError:
+                    pass
+        elif stop is not None and stop.is_set():
+            # graceful drain: stop READING (handlers see EOF and exit
+            # their loop) but keep the write side open, so each
+            # handler's writer flushes every queued / batched response
+            # before the connection closes — no abandoned futures
+            for _, c, _ in pending:
+                try:
+                    c.shutdown(socket.SHUT_RD)
                 except OSError:
                     pass
         for w, _, _ in pending:
@@ -763,6 +913,20 @@ class EdgeClient:
     (RESPLIT control frame + ack): the local edge sub-model and the cloud
     peer's ``start_layer`` swap together without reconnecting — the hook
     the adaptive split controller drives when the measured link drifts.
+
+    Fault tolerance (``fault_policy``): every socket read carries the
+    per-request deadline (a dead cloud raises ``RequestTimeout`` instead
+    of blocking forever); with a policy armed, ``infer`` survives frame
+    corruption (CRC), timeouts, and mid-stream disconnects by
+    reconnecting — exponential backoff with deterministic jitter,
+    re-HELLO, re-RESPLIT to the current split — and replaying the
+    in-flight request under its sequence number. When the retry budget
+    or deadline is exhausted, ``fallback="edge"`` serves the request
+    locally from the bank's c=N pair (logits bit-identical to an
+    all-edge deployment). Every ``infer`` result carries the uniform
+    ``fault`` record (``{faults, retries, fallback}``); ``faults=``
+    attaches a client-side ``FaultInjector`` applied to outgoing data
+    frames (tests/benchmarks).
     """
 
     def __init__(self, params, cfg: CNNConfig, split: int, port: int,
@@ -771,37 +935,92 @@ class EdgeClient:
                  pack: bool = False, host: str = "127.0.0.1",
                  timeout: float = 30.0,
                  plan_digest: Optional[str] = None,
-                 trace: Optional[LinkTrace] = None):
+                 trace: Optional[LinkTrace] = None,
+                 fault_policy: Optional[FaultPolicy] = None,
+                 faults: Optional[FaultInjector] = None):
         self._bank = SplitFnBank(params, cfg, masks, compact, pack)
         self.edge_fn, _, self._keep = self._bank.get(split)
         self.split = split
+        self._plan_split = split      # the split a fresh cloud handler is at
         self.cfg = cfg
         self.codec = codec
-        sock = socket.create_connection((host, port), timeout=timeout)
-        self.ch = (ShapedSocket(sock, link, trace=trace)
-                   if link or trace else None)
-        self.sock = sock
+        self._host, self._port = host, port
+        self._timeout = timeout
+        self._link, self._trace = link, trace
+        self._digest = plan_digest
+        self.policy = fault_policy
+        self.faults = faults
+        self._rng = fault_policy.make_rng() if fault_policy else None
+        self._seq = 0
+        self.use_crc = False
+        self.last_fault = fault_record()
+        self.sock: Optional[socket.socket] = None
+        self.ch: Optional[ShapedSocket] = None
         self._send_q: Optional[queue.Queue] = None
         self._out_q: Optional[queue.Queue] = None
         self._outstanding = 0
         self._n_collected = 0
         self._ready: Dict[int, Dict] = {}    # dequeued-but-not-collected
         self._workers: List[threading.Thread] = []
-        if plan_digest is not None:
-            self._handshake(plan_digest)
+        self._connect()
+
+    # -- connection lifecycle ------------------------------------------------
+    def _connect(self) -> None:
+        """(Re)open the cloud connection: TCP connect, arm the read
+        deadline, wrap in the shaper, HELLO (advertising the CRC
+        capability), and — when the session's current split has drifted
+        from the plan's (the fresh cloud handler starts there) —
+        re-RESPLIT the new connection to the current split."""
+        sock = socket.create_connection((self._host, self._port),
+                                        timeout=self._timeout)
+        # one attempt's slice of the per-request deadline is the socket
+        # read timeout: a dead cloud surfaces as RequestTimeout, never a
+        # forever-block, and a lost response leaves deadline budget for
+        # the replays instead of consuming all of it on the first read
+        sock.settimeout(self.policy.attempt_timeout_s()
+                        if self.policy is not None else self._timeout)
+        self.sock = sock
+        self.ch = (ShapedSocket(sock, self._link, trace=self._trace)
+                   if self._link or self._trace else None)
+        self.use_crc = False
+        if self._digest is not None:
+            self._handshake(self._digest)
+        if self.split != self._plan_split:
+            self._resplit_on_wire(self.split)
+
+    def _teardown(self) -> None:
+        """Drop the (possibly half-dead) connection; ``_connect`` will
+        rebuild it on the next attempt."""
+        if self.sock is not None:
+            try:
+                (self.ch or self.sock).close()
+            except OSError:
+                pass
+        self.sock = None
+        self.ch = None
+        self.use_crc = False
 
     def _handshake(self, digest: str) -> None:
         """HELLO exchange: send our plan digest, require the cloud's accept.
         Raises ``PlanMismatchError`` when the peers disagree on the
-        deployment contract (or the peer cannot handshake at all)."""
-        hello = encode_hello(digest)
+        deployment contract (or the peer cannot handshake at all). The
+        HELLO advertises ``CAP_CRC``; sealed frames are armed iff the
+        cloud echoes the capability (legacy clouds reply without a caps
+        byte and the wire stays unsealed)."""
+        hello = encode_hello(digest, caps=CAP_CRC)
         self._send(struct.pack("<Q", len(hello)) + hello)
         try:
             rx, _ = _frame_io(self.sock, self.ch)
             (n,) = struct.unpack("<Q", rx(8))
-            peer, status, pver = decode_hello(rx(n))
+            buf = rx(n)
+            peer, status, pver = decode_hello(buf)
         except (EOFError, OSError, ValueError) as e:
             self.sock.close()
+            if self.policy is not None and not isinstance(e, ValueError):
+                # fault-tolerant edge: a connection torn down during the
+                # HELLO is transport trouble (the cloud may be dying or
+                # restarting under us) — retriable, not a plan mismatch
+                raise
             raise PlanMismatchError(
                 f"cloud peer closed or answered garbage during the plan "
                 f"handshake (legacy server without HELLO support?): {e}")
@@ -816,6 +1035,7 @@ class EdgeClient:
                 f"deployment-plan mismatch: edge digest {digest!r}, "
                 f"cloud digest {peer or '<unknown>'!r} — both peers must "
                 f"load the same DeploymentPlan (split/compact/codec/model)")
+        self.use_crc = bool(hello_caps(buf) & CAP_CRC)
 
     # -- framing ------------------------------------------------------------
     def _encode_payload(self, x: np.ndarray) -> bytes:
@@ -833,11 +1053,48 @@ class EdgeClient:
     def _send_payload(self, payload: bytes) -> None:
         self._send(struct.pack("<Q", len(payload)) + payload)
 
-    def _recv_response(self) -> np.ndarray:
+    def _send_request(self, seq: int, payload: bytes) -> None:
+        """Ship one data frame: sealed (CRC32 + seq) when negotiated,
+        with the client-side fault injector applied to the wire bytes
+        (drop / corrupt / stall / tear-down) when one is attached."""
+        frame = encode_sealed(seq, payload) if self.use_crc else payload
+        if self.faults is not None:
+            ev = self.faults.next_event()
+            if ev is not None:
+                maybe = apply_send_fault(ev, frame, self.sock)
+                if maybe is None:
+                    return              # injected drop: frame never leaves
+                frame = maybe
+        self._send(struct.pack("<Q", len(frame)) + frame)
+
+    def _recv_response(self, seq: Optional[int] = None) -> np.ndarray:
+        """Read one logits response. With ``seq`` set (sealed wire),
+        replies are CRC-checked and matched by sequence number — a stale
+        reply to a superseded attempt is discarded, corruption raises
+        ``FrameIntegrityError``. A read past the deadline raises
+        ``RequestTimeout``."""
         rx, _ = _frame_io(self.sock, self.ch)
-        (n,) = struct.unpack("<Q", rx(8))
-        logits, _ = decode_tensor(rx(n))
-        return logits
+        try:
+            while True:
+                (n,) = struct.unpack("<Q", rx(8))
+                buf = rx(n)
+                if is_sealed(buf):
+                    rseq, buf = decode_sealed(buf)
+                    if seq is not None and rseq != seq:
+                        continue        # stale reply from an old attempt
+                logits, _ = decode_tensor(buf)
+                return logits
+        except socket.timeout as e:
+            raise RequestTimeout(
+                f"no cloud response within the "
+                f"{self.sock.gettimeout():.3f}s deadline") from e
+
+    def heartbeat(self) -> None:
+        """Send one keepalive frame (no reply expected) so a cloud with
+        idle-client reaping armed keeps this connection alive between
+        requests."""
+        hb = encode_heartbeat()
+        self._send(struct.pack("<Q", len(hb)) + hb)
 
     def warm(self, splits: Sequence[int]) -> None:
         """Pre-jit the edge half of every candidate split (batch-1 shape)
@@ -858,6 +1115,14 @@ class EdgeClient:
             raise RuntimeError(
                 f"resplit with {self._outstanding - self._n_collected} "
                 f"outstanding pipelined request(s); collect() them first")
+        self._resplit_on_wire(split)
+        self.adopt_split(split)
+
+    def _resplit_on_wire(self, split: int) -> None:
+        """The raw RESPLIT exchange (frame + ack) on the live connection,
+        without touching local sub-model state — shared by ``resplit``
+        and the reconnect path (which re-announces the current split to
+        a fresh cloud handler)."""
         self._send_payload(encode_resplit(split))
         rx, _ = _frame_io(self.sock, self.ch)
         (n,) = struct.unpack("<Q", rx(8))
@@ -866,17 +1131,51 @@ class EdgeClient:
             raise PlanMismatchError(
                 f"cloud rejected resplit to c={split} (not a candidate of "
                 f"its deployment plan, or outside the deployed network)")
+
+    def adopt_split(self, split: int) -> None:
+        """Swap the local edge sub-model to ``split`` without touching
+        the wire — used while the cloud is unreachable (edge-only
+        degradation); the next successful reconnect re-RESPLITs the
+        fresh connection to this split before replaying."""
         self.edge_fn, _, self._keep = self._bank.get(split)
         self.split = split
 
     # -- synchronous path ---------------------------------------------------
+    def _infer_edge_only(self, image: np.ndarray, rec: Dict,
+                         t0: float) -> Dict:
+        """Degradation-ladder bottom rung: serve the request locally from
+        the bank's c=N pair — the full network jitted exactly as an
+        all-edge split deploys it, so the logits are bit-identical to a
+        local c=N run. No bytes cross the wire (``tx_bytes`` 0)."""
+        rec["fallback"] = True
+        tf0 = time.perf_counter()
+        full_fn, _, _ = self._bank.get(self._bank.n_layers)
+        out = full_fn(jnp.asarray(image))
+        jax.block_until_ready(out)
+        tf1 = time.perf_counter()
+        self.last_fault = dict(rec)
+        return {"logits": np.asarray(out), "t_edge": tf1 - tf0,
+                "t_net_and_cloud": 0.0, "t_tx": 0.0, "tx_bytes": 0,
+                "t_total_with_recovery": tf1 - t0,
+                "fault": dict(rec)}
+
     def infer(self, image: np.ndarray) -> Dict:
         """One request/response. ``t_tx`` is the uplink observation the
         bandwidth estimator feeds on: the shaper's modeled cost of the
         feature send when the socket is shaped (wall-clock is useless
         there — the token bucket lets small frames burst through), the
         send wall-clock on a raw socket. ``t_net_and_cloud`` additionally
-        includes the cloud compute and the logits downlink."""
+        includes the cloud compute and the logits downlink.
+
+        With a ``FaultPolicy`` armed this is the recovery loop: a fault
+        (timeout, disconnect, CRC failure) tears the connection down and
+        the request is retried — backoff, reconnect (re-HELLO,
+        re-RESPLIT), replay under the same sequence number — until the
+        retry budget or the per-request deadline runs out, at which
+        point the policy's fallback serves it edge-only (or re-raises).
+        The ``fault`` key of the result is the uniform per-request
+        record ``{faults, retries, fallback}``."""
+        rec = fault_record()
         t0 = time.perf_counter()
         x = jnp.asarray(image)
         if self.edge_fn is not None:
@@ -884,16 +1183,50 @@ class EdgeClient:
             jax.block_until_ready(x)
         t1 = time.perf_counter()
         payload = self._encode_payload(np.asarray(x))
-        self._send_payload(payload)
-        t_sent = time.perf_counter()
-        logits = self._recv_response()
+        self._seq = (self._seq + 1) & 0xFFFFFFFF
+        seq = self._seq
+        deadline = (time.monotonic() + self.policy.request_deadline_s
+                    if self.policy is not None else None)
+        attempt = 0
+        while True:
+            try:
+                if self.sock is None:
+                    self._connect()     # reconnect: HELLO + re-RESPLIT
+                self._send_request(seq, payload)
+                t_sent = time.perf_counter()
+                logits = self._recv_response(seq if self.use_crc else None)
+                break
+            except PlanMismatchError:
+                raise                   # contract breakage is not transient
+            except (FrameIntegrityError, EOFError, OSError) as e:
+                rec["faults"] += 1
+                self._teardown()
+                exhausted = (self.policy is None
+                             or attempt >= self.policy.max_retries
+                             or (deadline is not None
+                                 and time.monotonic() >= deadline))
+                if exhausted:
+                    self.last_fault = dict(rec)
+                    if (self.policy is not None
+                            and self.policy.fallback == "edge"):
+                        return self._infer_edge_only(image, rec, t0)
+                    raise
+                rec["retries"] += 1
+                pause = self.policy.backoff_s(attempt, self._rng)
+                if deadline is not None:
+                    pause = min(pause, max(0.0,
+                                           deadline - time.monotonic()))
+                time.sleep(pause)
+                attempt += 1
         t2 = time.perf_counter()
+        self.last_fault = dict(rec)
         return {"logits": logits,
                 "t_edge": t1 - t0,
                 "t_net_and_cloud": t2 - t1,
                 "t_tx": (self.ch.last_send_cost_s if self.ch is not None
                          else t_sent - t1),
-                "tx_bytes": len(payload)}
+                "tx_bytes": len(payload),
+                "fault": dict(rec)}
 
     # -- pipelined (async) path ---------------------------------------------
     def _sender_loop(self) -> None:
@@ -982,4 +1315,5 @@ class EdgeClient:
             self._send_q.put(None)
             for w in self._workers:
                 w.join(timeout=30)
-        (self.ch or self.sock).close()
+        if self.sock is not None:
+            (self.ch or self.sock).close()

@@ -17,11 +17,22 @@ split picked at deployment time stops being optimal mid-run. The collab
 channels (``SimChannel``/``ShapedSocket``) replay a trace per transmitted
 byte, and ``repro.core.collab.adaptive`` re-plans the split against the
 bandwidth the trace actually delivers. Canned traces live in ``TRACES``.
+
+Fault schedules: a ``LinkTrace`` degrades the link; a ``FaultSchedule``
+*breaks* it — deterministic, seedable sequences of frame drops, byte
+corruption, stalls, mid-stream disconnects, and cloud-process death,
+indexed by transmission-attempt number so every failure mode is exactly
+reproducible in tests and benchmarks. The collab channels replay a
+schedule through a ``FaultInjector`` (``repro.core.collab.channel``);
+the recovery machinery that survives one lives in
+``repro.core.collab.faults``. Canned schedules live in
+``FAULT_SCHEDULES``.
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -212,4 +223,125 @@ TRACES = {
     "wifi_degrading": WIFI_DEGRADING,
     "lte_handover": LTE_HANDOVER,
     "congested_sawtooth": CONGESTED_SAWTOOTH,
+}
+
+
+# --- fault schedules ---------------------------------------------------------
+#: failure modes a schedule may inject, in roughly increasing severity
+FAULT_KINDS = ("drop", "corrupt", "stall", "disconnect", "die")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One injected failure, pinned to a transmission-attempt index.
+
+    ``attempt`` counts data-frame transmission attempts on the injected
+    path (0-based); retries are new attempts, so a schedule that faults
+    attempt 3 but not attempt 4 lets the first retry succeed. ``kind``
+    is one of ``FAULT_KINDS``:
+
+    - ``drop``: the frame is silently lost (never delivered);
+    - ``corrupt``: one payload byte is flipped in flight;
+    - ``stall``: delivery is delayed by ``stall_s`` seconds;
+    - ``disconnect``: the connection is torn down mid-stream;
+    - ``die``: the cloud process itself is killed (server-side only;
+      on a client-side injector it behaves like ``disconnect``).
+    """
+    attempt: int
+    kind: str
+    stall_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.attempt < 0:
+            raise ValueError("fault attempt index must be >= 0")
+        if self.kind == "stall" and self.stall_s <= 0:
+            raise ValueError("stall events need stall_s > 0")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """A deterministic sequence of injected faults, keyed by attempt.
+
+    A schedule is to failures what a ``LinkTrace`` is to bandwidth: a
+    canned, replayable storyline. It is pure data — stateless and
+    reusable; the per-run attempt counter lives in the
+    ``FaultInjector`` that replays it (``repro.core.collab.channel``),
+    so the same schedule object can drive many independent runs.
+    """
+    name: str
+    events: Tuple[FaultEvent, ...]
+
+    def __post_init__(self) -> None:
+        seen = set()
+        for ev in self.events:
+            if ev.attempt in seen:
+                raise ValueError(f"schedule {self.name!r} has two events "
+                                 f"for attempt {ev.attempt}")
+            seen.add(ev.attempt)
+
+    def event_at(self, attempt: int) -> Optional[FaultEvent]:
+        """The fault injected at transmission attempt ``attempt``, or
+        None for a clean attempt."""
+        for ev in self.events:
+            if ev.attempt == attempt:
+                return ev
+        return None
+
+    @property
+    def n_events(self) -> int:
+        """Total number of injected faults in the schedule."""
+        return len(self.events)
+
+    @classmethod
+    def seeded(cls, name: str, seed: int, n_attempts: int,
+               drop: float = 0.0, corrupt: float = 0.0, stall: float = 0.0,
+               stall_s: float = 0.05, disconnect: float = 0.0,
+               ) -> "FaultSchedule":
+        """Draw a random-but-reproducible schedule over ``n_attempts``.
+
+        Each attempt independently suffers at most one fault, drawn
+        with the given per-kind probabilities from ``random.Random
+        (seed)`` — same seed, same schedule, forever. Probabilities
+        must sum to <= 1.
+        """
+        p_total = drop + corrupt + stall + disconnect
+        if p_total > 1.0:
+            raise ValueError("fault probabilities sum to > 1")
+        rng = random.Random(seed)
+        events = []
+        for a in range(n_attempts):
+            u = rng.random()
+            if u < drop:
+                events.append(FaultEvent(a, "drop"))
+            elif u < drop + corrupt:
+                events.append(FaultEvent(a, "corrupt"))
+            elif u < drop + corrupt + stall:
+                events.append(FaultEvent(a, "stall", stall_s=stall_s))
+            elif u < p_total:
+                events.append(FaultEvent(a, "disconnect"))
+        return cls(name, tuple(events))
+
+
+#: lossy uplink: ~6% of frames vanish in flight
+FAULT_DROP_BURST = FaultSchedule.seeded("drop_burst", seed=7,
+                                        n_attempts=600, drop=0.06)
+#: congested AP: ~8% of frames stall for 30 ms, a few are corrupted
+FAULT_STALL_STORM = FaultSchedule.seeded("stall_storm", seed=11,
+                                         n_attempts=600, corrupt=0.02,
+                                         stall=0.08, stall_s=0.03)
+#: coverage hole: every attempt in a contiguous window tears the
+#: connection down — retries inside the window keep failing
+FAULT_OUTAGE = FaultSchedule(
+    "outage", tuple(FaultEvent(a, "disconnect") for a in range(12, 18)))
+#: the cloud process is killed mid-stream at attempt 8
+FAULT_CLOUD_DEATH = FaultSchedule("cloud_death", (FaultEvent(8, "die"),))
+
+FAULT_SCHEDULES = {
+    "drop_burst": FAULT_DROP_BURST,
+    "stall_storm": FAULT_STALL_STORM,
+    "outage": FAULT_OUTAGE,
+    "cloud_death": FAULT_CLOUD_DEATH,
 }

@@ -27,19 +27,38 @@ plan's ``energy`` section to price every request's edge joules
 latency·energy objective (``from_args(split=None)``), and — combined
 with an ``adaptive`` section and a ``battery_j`` budget — have the
 session re-split toward the low-energy end of the Pareto front as the
-battery drains. See ``docs/architecture.md`` and
-``docs/deployment-plan.md`` for the full serving contract.
+battery drains.
+
+Fault tolerance: attach ``FaultPolicy(...)`` as the plan's ``faults``
+section to arm the recovery machinery — per-frame CRC + sequence
+numbers (negotiated via the HELLO caps byte, so legacy peers still
+interoperate), a per-request deadline (``RequestTimeout`` instead of a
+hang on a dead cloud), retries with exponential backoff + jitter
+(reconnect, re-HELLO, re-RESPLIT, replay by sequence), and edge-only
+graceful degradation (bit-identical to an all-edge split) when the
+budget exhausts. Deterministic fault *injection* for tests and
+benchmarks comes from ``FaultSchedule``/``FaultInjector``
+(``FAULT_SCHEDULES`` has the canned storms). See
+``docs/architecture.md`` and ``docs/deployment-plan.md`` for the full
+serving contract and ``docs/wire-protocol.md`` for the fault-tolerant
+framing.
 """
 from repro.core.collab.adaptive import (AdaptivePolicy,
                                         AdaptiveSplitController,
                                         BandwidthEstimator, SplitSwitch)
 from repro.core.collab.batching import BatchingPolicy, LaneStats
-from repro.core.collab.protocol import PlanMismatchError
+from repro.core.collab.channel import FaultInjector
+from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
+                                      fault_record)
+from repro.core.collab.protocol import (FrameIntegrityError,
+                                        PlanMismatchError)
 from repro.core.partition.energy_model import (ENERGY_PROFILES, MCU_ENERGY,
                                                PAPER_EDGE_ENERGY, PI_ENERGY,
                                                EnergyPolicy, EnergyProfile,
                                                RadioProfile, pareto_front)
-from repro.core.partition.profiles import TRACES, LinkTrace, TraceSegment
+from repro.core.partition.profiles import (FAULT_SCHEDULES, TRACES,
+                                           FaultEvent, FaultSchedule,
+                                           LinkTrace, TraceSegment)
 from repro.serving.plan import PLAN_VERSION, DeploymentPlan
 from repro.serving.session import (BACKENDS, CloudServer, InferenceSession,
                                    LocalSession, SocketSession,
@@ -54,4 +73,7 @@ __all__ = [
     "BatchingPolicy", "LaneStats",
     "EnergyPolicy", "EnergyProfile", "RadioProfile", "pareto_front",
     "ENERGY_PROFILES", "MCU_ENERGY", "PI_ENERGY", "PAPER_EDGE_ENERGY",
+    "FaultPolicy", "FaultSchedule", "FaultEvent", "FaultInjector",
+    "RequestTimeout", "FrameIntegrityError", "fault_record",
+    "FAULT_SCHEDULES",
 ]

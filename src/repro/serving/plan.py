@@ -64,6 +64,19 @@ is folded into the digest **only when set** (un-metered plans keep
 their digests): metering changes which split both peers deploy and may
 re-plan to, so peers must agree on it.
 
+**Fault-tolerant plans**: setting ``faults=FaultPolicy(...)`` arms the
+recovery machinery (``repro.core.collab.faults``): the edge client
+applies the per-request deadline to every socket read (a dead cloud
+raises ``RequestTimeout`` instead of hanging), retries transient
+failures with exponential backoff + deterministic jitter (reconnect,
+re-HELLO, re-RESPLIT to the controller's current split, replay by
+sequence number), and — when the retry budget exhausts and
+``fallback="edge"`` — serves the request locally from the bank's c=N
+pair, bit-identical to an all-edge deployment; the cloud reaps clients
+silent for ``3 * heartbeat_s``. Like the other optional sections,
+``faults`` folds into the digest **only when set**, so pre-fault plans
+keep their digests byte-for-byte.
+
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
 from __future__ import annotations
@@ -82,6 +95,7 @@ from repro.checkpoint import store
 from repro.configs.base import CNNConfig, ConvLayerSpec
 from repro.core.collab.adaptive import AdaptivePolicy
 from repro.core.collab.batching import BatchingPolicy
+from repro.core.collab.faults import FaultPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.partition.energy_model import EnergyPolicy
 from repro.core.partition.latency_model import (cnn_input_bytes,
@@ -147,6 +161,7 @@ class DeploymentPlan:
     adaptive: Optional[AdaptivePolicy] = None
     batching: Optional[BatchingPolicy] = None
     energy: Optional[EnergyPolicy] = None
+    faults: Optional[FaultPolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -240,7 +255,11 @@ class DeploymentPlan:
         energy section likewise: only present when set (un-metered plans
         keep their digests), folded in because metering changes which
         split the deployment picks and may re-plan to under a battery
-        budget."""
+        budget. The faults section follows the same only-when-set rule
+        (pre-fault plans keep their digests byte-for-byte): the retry /
+        heartbeat / fallback contract changes how both peers behave on
+        the wire — a heartbeat-reaping cloud against a non-heartbeating
+        edge would sever healthy clients — so peers must agree on it."""
         masks = None
         if self.masks:
             masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
@@ -255,6 +274,8 @@ class DeploymentPlan:
             doc["batching"] = self.batching.to_json()
         if self.energy is not None:
             doc["energy"] = self.energy.to_json()
+        if self.faults is not None:
+            doc["faults"] = self.faults.to_json()
         return doc
 
     @property
@@ -287,6 +308,8 @@ class DeploymentPlan:
                             if self.batching else None),
                "energy": (self.energy.to_json()
                           if self.energy else None),
+               "faults": (self.faults.to_json()
+                          if self.faults else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -313,6 +336,8 @@ class DeploymentPlan:
                     if doc.get("batching") else None)
         energy = (EnergyPolicy.from_json(doc["energy"])
                   if doc.get("energy") else None)
+        faults = (FaultPolicy.from_json(doc["faults"])
+                  if doc.get("faults") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -320,7 +345,7 @@ class DeploymentPlan:
                    host=link["host"], port=link["port"],
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
-                   batching=batching, energy=energy,
+                   batching=batching, energy=energy, faults=faults,
                    version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
@@ -347,9 +372,12 @@ class DeploymentPlan:
                      f"@{self.energy.energy_weight_s_per_j:g}s/J")
             if self.energy.battery_j is not None:
                 joule += f" battery={self.energy.battery_j:g}J"
+        tol = (f", faults: retries<={self.faults.max_retries}"
+               f" fallback={self.faults.fallback}"
+               if self.faults else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name}){adapt}{batch}{joule}")
+                f"({self.profile.link.name}){adapt}{batch}{joule}{tol}")

@@ -17,7 +17,8 @@ Every backend returns the same result shape from ``infer`` /
 ``infer_many``::
 
     {"logits": np.ndarray, "t_edge": float|None, "t_upstream": float|None,
-     "t_total": float|None, "tx_bytes": int|None, "e_edge_j": float|None}
+     "t_total": float|None, "tx_bytes": int|None, "e_edge_j": float|None,
+     "fault": {"faults": int, "retries": int, "fallback": bool}}
 
 with uniform key semantics across the three backends: ``t_*`` are
 seconds, ``tx_bytes`` is bytes, ``e_*`` are joules. ``t_upstream`` is
@@ -29,7 +30,23 @@ transmitted frame *payload* — identical across backends for the same plan
 ``e_edge_j`` is the edge device's energy for the request, priced by the
 plan's ``energy`` section (``None`` on an un-metered plan, and on the
 socket backend's pipelined ``infer_many`` where the uplink time cannot
-be attributed per request).
+be attributed per request). ``fault`` is the uniform per-request fault
+accounting (``repro.core.collab.faults.fault_record``) — all-zero on a
+clean request, and the socket backend reports the faults survived, the
+recovery attempts spent, and whether the request was served by the
+edge-only fallback.
+
+**Fault-tolerant plans** (``plan.faults`` set): the socket session's
+``EdgeClient`` retries transient failures (reconnect + re-HELLO +
+re-RESPLIT + replay by sequence number) under the policy's backoff and
+deadline, and falls back to edge-only inference when the budget
+exhausts. On a fallback with an adaptive plan the session reports the
+outage to the controller (``note_outage`` — bandwidth collapses to ~0,
+so the decision is an immediate re-split to the latest candidate,
+typically c=N) and adopts the new split *locally* (``adopt_split`` —
+the wire is down; the next successful reconnect re-RESPLITs to it);
+once requests flow again, healthy uplink observations pull the
+estimate back up and the controller re-splits toward offloading.
 
 **Adaptive plans** (``plan.adaptive`` set): the ``local`` and ``socket``
 sessions close the control loop per request — each ``infer`` feeds its
@@ -51,6 +68,8 @@ import numpy as np
 from repro.core.collab.adaptive import (AdaptiveSplitController,
                                         SplitSwitch)
 from repro.core.collab.batching import bucket_for
+from repro.core.collab.channel import FaultInjector
+from repro.core.collab.faults import fault_record
 from repro.core.collab.protocol import PlanMismatchError  # re-export  # noqa: F401
 from repro.core.collab.runtime import (CollabRunner, EdgeClient,
                                        serve_cloud)
@@ -72,15 +91,18 @@ def _controller_for(plan: DeploymentPlan) -> Optional[AdaptiveSplitController]:
 
 def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
             tx_bytes: Optional[int],
-            e_edge_j: Optional[float] = None) -> Dict:
+            e_edge_j: Optional[float] = None,
+            fault: Optional[Dict] = None) -> Dict:
     """The one result shape every backend returns: ``t_*`` seconds,
     ``tx_bytes`` bytes, ``e_edge_j`` joules (None = unattributable or
-    un-metered)."""
+    un-metered), ``fault`` the uniform ``{faults, retries, fallback}``
+    accounting (all-zero when the backend reports none)."""
     total = (None if t_edge is None or t_upstream is None
              else t_edge + t_upstream)
     return {"logits": np.asarray(logits), "t_edge": t_edge,
             "t_upstream": t_upstream, "t_total": total,
-            "tx_bytes": tx_bytes, "e_edge_j": e_edge_j}
+            "tx_bytes": tx_bytes, "e_edge_j": e_edge_j,
+            "fault": dict(fault) if fault else fault_record()}
 
 
 class InferenceSession:
@@ -133,14 +155,16 @@ class LocalSession(InferenceSession):
     def __init__(self, plan: DeploymentPlan, *,
                  realtime_channel: bool = False,
                  simulate_compute: bool = True,
-                 trace: Optional[LinkTrace] = None):
+                 trace: Optional[LinkTrace] = None,
+                 faults: Optional[FaultInjector] = None):
         super().__init__(plan)
         self._runner = CollabRunner(
             plan.params, plan.cfg, plan.split, plan.profile,
             masks=plan.masks, realtime_channel=realtime_channel,
             simulate_compute=simulate_compute, compact=plan.compact,
             codec=plan.codec, pack=plan.pack, trace=trace,
-            energy=plan.energy.profile if plan.energy else None)
+            energy=plan.energy.profile if plan.energy else None,
+            faults=faults)
         self._controller = _controller_for(plan)
         if self._controller is not None:
             # pre-jit every candidate so a switch doesn't stall a request
@@ -159,7 +183,7 @@ class LocalSession(InferenceSession):
                 self.split = sw.new_split
                 self.switches.append(sw)
         return _result(res["logits"], t.t_device, t.t_tx + t.t_server,
-                       t.tx_bytes, t.e_edge_j)
+                       t.tx_bytes, t.e_edge_j, fault=res.get("fault"))
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         """Batched fast path when the plan carries a ``batching`` section
@@ -184,7 +208,7 @@ class LocalSession(InferenceSession):
                 t = r["timing"]
                 out.append(_result(r["logits"], t.t_device,
                                    t.t_tx + t.t_server, t.tx_bytes,
-                                   t.e_edge_j))
+                                   t.e_edge_j, fault=r.get("fault")))
             chunk, chunk_rows = [], 0
 
         for img in images:
@@ -219,7 +243,8 @@ class SocketSession(InferenceSession):
 
     def __init__(self, plan: DeploymentPlan, *, verify: bool = True,
                  host: Optional[str] = None, port: Optional[int] = None,
-                 trace: Optional[LinkTrace] = None):
+                 trace: Optional[LinkTrace] = None,
+                 faults: Optional[FaultInjector] = None):
         super().__init__(plan)
         self._client = EdgeClient(
             plan.params, plan.cfg, plan.split, port or plan.port,
@@ -227,12 +252,17 @@ class SocketSession(InferenceSession):
             link=plan.profile.link if plan.shape_link else None,
             compact=plan.compact, codec=plan.codec, pack=plan.pack,
             host=host or plan.host, timeout=plan.connect_timeout_s,
-            plan_digest=plan.digest if verify else None, trace=trace)
+            plan_digest=plan.digest if verify else None, trace=trace,
+            fault_policy=plan.faults, faults=faults)
         self._controller = _controller_for(plan)
         if self._controller is not None:
             # pre-jit the edge half of every candidate (the cloud peer
             # warms its own halves when it arms RESPLIT)
             self._client.warm(plan.adaptive.candidates)
+        if plan.faults is not None and plan.faults.fallback == "edge":
+            # pre-jit the c=N pair so the first edge-only fallback does
+            # not pay an XLA trace in the middle of an outage
+            self._client.warm([len(plan.cfg.layers)])
 
     def resplit(self, split: int) -> None:
         """Move the partition on the live connection (RESPLIT + ack).
@@ -261,14 +291,26 @@ class SocketSession(InferenceSession):
         and executes any decided RESPLIT."""
         res = self._client.infer(image)
         e = self._energy(res)
+        rec = res.get("fault")
         if self._controller is not None:
-            sw = self._controller.step(res["tx_bytes"], res["t_tx"], e)
-            if sw is not None:
-                self._client.resplit(sw.new_split)
-                self.split = sw.new_split
-                self.switches.append(sw)
+            if rec and rec["fallback"]:
+                # outage: the cloud is unreachable, so the switch (if
+                # any) is adopted locally — the client re-RESPLITs the
+                # wire on its next successful reconnect
+                sw = self._controller.note_outage()
+                if sw is not None:
+                    self._client.adopt_split(sw.new_split)
+                    self.split = sw.new_split
+                    self.switches.append(sw)
+            else:
+                sw = self._controller.step(res["tx_bytes"], res["t_tx"], e)
+                if sw is not None:
+                    self._client.resplit(sw.new_split)
+                    self.split = sw.new_split
+                    self.switches.append(sw)
         return _result(res["logits"], res["t_edge"],
-                       res["t_net_and_cloud"], res["tx_bytes"], e)
+                       res["t_net_and_cloud"], res["tx_bytes"], e,
+                       fault=rec)
 
     def infer_many(self, images: Sequence[np.ndarray]) -> List[Dict]:
         """Pipelined submit/collect: edge compute of request i+1 overlaps
@@ -284,7 +326,8 @@ class SocketSession(InferenceSession):
         for img in images:
             self._client.submit(img)
         out = self._client.collect(len(images))
-        return [_result(r["logits"], r["t_edge"], None, r["tx_bytes"])
+        return [_result(r["logits"], r["t_edge"], None, r["tx_bytes"],
+                        fault=r.get("fault"))
                 for r in out]
 
     def close(self) -> None:
@@ -366,7 +409,10 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
           verify: bool = True,
           trace: Optional[LinkTrace] = None,
           batch_stats: Optional[Dict] = None,
-          simulate_server=None) -> None:
+          simulate_server=None,
+          faults: Optional[FaultInjector] = None,
+          fault_stats: Optional[Dict] = None,
+          die: Optional[threading.Event] = None) -> None:
     """Cloud-side entry point: serve ``plan`` on its link endpoint
     (blocking). ``max_clients=None`` + a ``stop`` event serves many edges
     until told to quit; ``verify`` arms the HELLO digest check. An
@@ -379,7 +425,17 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
     ``simulate_server`` (a ``ComputeProfile``) additionally charges each
     cloud invocation its analytic device time on that hardware,
     serialized server-wide (see ``serve_cloud``) — the benchmark knob for
-    measuring the engine against the paper's 3090 on this container."""
+    measuring the engine against the paper's 3090 on this container.
+
+    A plan with a ``faults`` section arms the server's recovery side:
+    sealed (CRC + sequence) frames are negotiated per connection via the
+    HELLO caps byte, clients silent for ``3 * heartbeat_s`` are reaped,
+    and a ``stop`` becomes a graceful drain (in-flight batched requests
+    flush before the listener exits). ``faults`` (a ``FaultInjector``)
+    injects the schedule into the server's response path; ``fault_stats``
+    (a dict) receives classified error counts on shutdown; ``die`` is
+    the crash switch — setting it kills every connection without drain
+    (what ``CloudServer.kill`` uses to simulate cloud death)."""
     serve_cloud(plan.params, plan.cfg, plan.split, port or plan.port,
                 masks=plan.masks,
                 link=plan.profile.link if plan.shape_link else None,
@@ -390,7 +446,9 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
                 resplit_candidates=(plan.adaptive.candidates
                                     if plan.adaptive else None),
                 trace=trace, batching=plan.batching,
-                batch_stats=batch_stats, simulate_server=simulate_server)
+                batch_stats=batch_stats, simulate_server=simulate_server,
+                fault_policy=plan.faults, faults=faults,
+                fault_stats=fault_stats, die=die)
 
 
 class CloudServer:
@@ -406,12 +464,16 @@ class CloudServer:
                  max_clients: Optional[int] = None, verify: bool = True,
                  start_timeout: float = 10.0,
                  trace: Optional[LinkTrace] = None,
-                 simulate_server=None):
+                 simulate_server=None,
+                 faults: Optional[FaultInjector] = None):
         self.plan = plan
         #: per-lane dynamic-batching accounting (filled on shutdown when
         #: the plan carries a ``batching`` section)
         self.batch_stats: Dict = {}
+        #: classified server-side error counts (filled on shutdown)
+        self.fault_stats: Dict = {}
         self._stop = threading.Event()
+        self._die = threading.Event()
         ready = threading.Event()
         self._thread = threading.Thread(
             target=serve, args=(plan,),
@@ -419,15 +481,27 @@ class CloudServer:
                         max_clients=max_clients, ready=ready,
                         stop=self._stop, verify=verify, trace=trace,
                         batch_stats=self.batch_stats,
-                        simulate_server=simulate_server),
+                        simulate_server=simulate_server, faults=faults,
+                        fault_stats=self.fault_stats, die=self._die),
             daemon=True)
         self._thread.start()
         if not ready.wait(start_timeout):
             raise TimeoutError("cloud server failed to start listening")
 
     def stop(self, timeout: float = 10.0) -> None:
-        """Signal the serve loop to quit and join its thread (seconds);
-        fills ``batch_stats`` when the plan batches."""
+        """Signal the serve loop to quit and join its thread (seconds):
+        a *graceful drain* — in-flight batched requests flush before the
+        listener exits; fills ``batch_stats`` when the plan batches."""
+        self._stop.set()
+        self._thread.join(timeout)
+
+    def kill(self, timeout: float = 10.0) -> None:
+        """Simulated cloud death: hard-close every connection (no drain,
+        no goodbye — clients see a reset mid-stream) and join the serve
+        thread. The fault-injection benchmark's 'cloud process dies'
+        event; a fault-tolerant edge recovers by reconnecting to a fresh
+        server, everyone else gets a ``ConnectionError``."""
+        self._die.set()
         self._stop.set()
         self._thread.join(timeout)
 

@@ -293,7 +293,7 @@ def test_e_edge_j_parity_across_backends(setup):
     results["streaming"] = stream_sess.infer(x)
     for name, res in results.items():
         assert set(res) == {"logits", "t_edge", "t_upstream", "t_total",
-                            "tx_bytes", "e_edge_j"}, name
+                            "tx_bytes", "e_edge_j", "fault"}, name
         assert res["e_edge_j"] is not None and res["e_edge_j"] > 0, name
     assert (results["local"]["tx_bytes"] == results["socket"]["tx_bytes"]
             == results["streaming"]["tx_bytes"])

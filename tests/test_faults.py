@@ -1,0 +1,419 @@
+"""Fault-tolerant collaborative serving: deterministic fault injection
+(seeded schedules), CRC + sequence-number frame integrity, the HELLO
+capability negotiation (legacy no-CRC peers interoperate), the retry /
+backoff / deadline recovery loop, edge-only graceful degradation
+(bit-identical to an all-edge split), outage-aware adaptive re-splitting,
+heartbeat reaping, and graceful server drain.
+
+All socket tests run against seeded ``FaultSchedule``s — the same storm
+replays identically — and no assertion depends on a wall-clock sleep.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.core.collab.channel import corrupt_bytes
+from repro.core.collab.protocol import (CAP_CRC, decode_hello,
+                                        decode_sealed, decode_tensor,
+                                        encode_hello, encode_sealed,
+                                        encode_tensor, hello_caps,
+                                        is_sealed)
+from repro.core.collab.runtime import EdgeClient
+from repro.core.partition.profiles import (PAPER_SERVER, ComputeProfile,
+                                           FaultEvent, LinkProfile,
+                                           TwoTierProfile)
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import (cnn_apply, init_cnn_params, prunable_layers,
+                              tiny_cnn_config)
+
+SPLIT = 6
+
+
+@pytest.fixture(scope="module")
+def plan_setup():
+    cfg = tiny_cnn_config(num_classes=7, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(
+        params, cfg, {i: 0.5 for i in prunable_layers(cfg)})
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3)),
+                   np.float32)
+    want = np.asarray(cnn_apply(params, cfg, x, masks=masks))
+    return cfg, params, masks, x, want
+
+
+def make_plan(plan_setup, port, **kw):
+    cfg, params, masks, _, _ = plan_setup
+    kw.setdefault("split", SPLIT)
+    kw.setdefault("masks", masks)
+    kw.setdefault("compact", True)
+    kw.setdefault("codec", "fp32")
+    kw.setdefault("shape_link", False)
+    return serving.DeploymentPlan.from_args(params, cfg, port=port, **kw)
+
+
+def fast_policy(**kw):
+    """Milliseconds-scale recovery knobs so tests never idle."""
+    kw.setdefault("max_retries", 3)
+    kw.setdefault("backoff_base_s", 0.01)
+    kw.setdefault("backoff_max_s", 0.05)
+    kw.setdefault("backoff_jitter", 0.0)
+    kw.setdefault("request_deadline_s", 5.0)
+    return serving.FaultPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# schedules + policy (pure data, no sockets)
+# ---------------------------------------------------------------------------
+def test_fault_schedule_seeded_deterministic():
+    a = serving.FaultSchedule.seeded("s", seed=7, n_attempts=300, drop=0.1,
+                                     corrupt=0.05, stall=0.05)
+    b = serving.FaultSchedule.seeded("s", seed=7, n_attempts=300, drop=0.1,
+                                     corrupt=0.05, stall=0.05)
+    assert a.events == b.events and a.n_events > 0
+    c = serving.FaultSchedule.seeded("s", seed=8, n_attempts=300, drop=0.1)
+    assert a.events != c.events            # the seed IS the storm
+    for name, sched in serving.FAULT_SCHEDULES.items():
+        assert sched.n_events > 0, name
+
+
+def test_fault_injector_consumes_attempts():
+    sched = serving.FaultSchedule(
+        "two", (FaultEvent(0, "drop"), FaultEvent(2, "corrupt")))
+    inj = serving.FaultInjector(sched)
+    kinds = [getattr(inj.next_event(), "kind", None) for _ in range(4)]
+    assert kinds == ["drop", None, "corrupt", None]
+    assert inj.attempts == 4 and inj.injected == 2
+    inj.reset()
+    assert inj.attempts == 0 and inj.next_event().kind == "drop"
+
+
+def test_fault_policy_backoff_and_roundtrip():
+    p = fast_policy(backoff_jitter=0.5, seed=3)
+    assert p.backoff_s(0) == 0.01          # jitter-free without an rng
+    assert p.backoff_s(10) == 0.05         # capped
+    r1 = [p.backoff_s(i, p.make_rng()) for i in range(3)]
+    r2 = [p.backoff_s(i, p.make_rng()) for i in range(3)]
+    assert r1 == r2                        # deterministic jitter
+    assert serving.FaultPolicy.from_json(p.to_json()) == p
+    with pytest.raises(ValueError, match="fallback"):
+        serving.FaultPolicy(fallback="panic")
+    with pytest.raises(ValueError, match="deadline"):
+        serving.FaultPolicy(request_deadline_s=0)
+
+
+def test_plan_digest_stable_without_faults_section(plan_setup):
+    base = make_plan(plan_setup, 29520)
+    assert "faults" not in base.contract()     # only-when-set fold
+    armed = make_plan(plan_setup, 29520, faults=fast_policy())
+    assert "faults" in armed.contract()
+    assert base.digest != armed.digest
+    # transport-identical plan without the section: digest unchanged
+    assert base.digest == make_plan(plan_setup, 29999).digest
+
+
+def test_plan_save_load_roundtrips_fault_policy(plan_setup, tmp_path):
+    plan = make_plan(plan_setup, 29520, faults=fast_policy(heartbeat_s=1.0))
+    loaded = serving.DeploymentPlan.load(plan.save(str(tmp_path / "d")))
+    assert loaded.faults == plan.faults
+    assert loaded.digest == plan.digest
+    assert "faults" in plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# sealed frames: CRC32 + sequence numbers
+# ---------------------------------------------------------------------------
+def test_sealed_frame_roundtrip_and_corruption_rejected():
+    inner = encode_tensor(np.arange(12, dtype=np.float32))
+    frame = encode_sealed(41, inner)
+    assert is_sealed(frame)
+    seq, back = decode_sealed(frame)
+    assert seq == 41 and back == inner
+    with pytest.raises(serving.FrameIntegrityError):
+        decode_sealed(corrupt_bytes(frame))          # one flipped byte
+    with pytest.raises(serving.FrameIntegrityError):
+        decode_sealed(frame[:-3])                    # truncated in flight
+
+
+def test_hello_caps_negotiation():
+    plain = encode_hello("ab" * 8)
+    assert hello_caps(plain) == 0                    # legacy: no caps byte
+    capped = encode_hello("ab" * 8, caps=CAP_CRC)
+    assert hello_caps(capped) & CAP_CRC
+    # legacy decoder slices the digest by dlen: trailing caps byte ignored
+    assert decode_hello(capped) == decode_hello(plain)
+
+
+# ---------------------------------------------------------------------------
+# socket recovery ladder
+# ---------------------------------------------------------------------------
+def test_socket_session_negotiates_crc(plan_setup):
+    plan = make_plan(plan_setup, 29521, faults=fast_policy())
+    _, _, _, x, want = plan_setup
+    with serving.CloudServer(plan):
+        with serving.connect(plan, backend="socket") as sess:
+            assert sess._client.use_crc          # both peers advertised
+            res = sess.infer(x)
+    np.testing.assert_allclose(res["logits"], want, rtol=1e-4, atol=1e-4)
+    assert res["fault"] == {"faults": 0, "retries": 0, "fallback": False}
+
+
+def test_legacy_no_crc_peer_interoperates(plan_setup):
+    """A legacy edge (no caps byte in HELLO, unsealed frames) is served
+    by a fault-aware cloud on the plain wire format."""
+    cfg, _, _, _, _ = plan_setup
+    n = len(cfg.layers)
+    plan = make_plan(plan_setup, 29522, split=n,   # c=N: logits passthrough
+                     faults=fast_policy())
+    logits = np.arange(7, dtype=np.float32)[None]
+    with serving.CloudServer(plan):
+        with socket.create_connection(("127.0.0.1", plan.port), 5) as s:
+            s.settimeout(5)
+            hello = encode_hello(plan.digest)        # NO caps byte
+            s.sendall(struct.pack("<Q", len(hello)) + hello)
+            (m,) = struct.unpack("<Q", s.recv(8, socket.MSG_WAITALL))
+            reply = s.recv(m, socket.MSG_WAITALL)
+            _, status, _ = decode_hello(reply)
+            assert status == 0 and hello_caps(reply) == 0  # echo: no CRC
+            frame = encode_tensor(logits)            # unsealed request
+            s.sendall(struct.pack("<Q", len(frame)) + frame)
+            (m,) = struct.unpack("<Q", s.recv(8, socket.MSG_WAITALL))
+            resp = s.recv(m, socket.MSG_WAITALL)
+    assert not is_sealed(resp)                       # unsealed response
+    out, _ = decode_tensor(resp)
+    np.testing.assert_array_equal(out, logits)
+
+
+def test_corrupted_request_retried_bit_identical(plan_setup):
+    """Client-side injector corrupts the first data frame: the cloud's
+    CRC rejects it, the client reconnects and replays — logits
+    bit-identical to the fault-free run, one fault + one retry billed."""
+    _, _, _, x, _ = plan_setup
+    plan = make_plan(plan_setup, 29523, faults=fast_policy())
+    with serving.CloudServer(plan) as srv:
+        with serving.connect(plan, backend="socket") as sess:
+            clean = sess.infer(x)["logits"]
+        inj = serving.FaultInjector(
+            serving.FaultSchedule("c0", (FaultEvent(0, "corrupt"),)))
+        with serving.connect(plan, backend="socket",
+                             faults=inj) as sess:
+            res = sess.infer(x)
+        np.testing.assert_array_equal(res["logits"], clean)
+        assert res["fault"]["faults"] == 1
+        assert res["fault"]["retries"] == 1
+        assert res["fault"]["fallback"] is False
+        assert srv.fault_stats.get("integrity_errors", 0) >= 1
+
+
+def test_dropped_response_recovers_by_replay(plan_setup):
+    """Server-side injector drops a response mid-stream: the client hits
+    its deadline, reconnects, replays under the same sequence number,
+    and the fresh handler answers — bit-identical, no fallback."""
+    _, _, _, x, _ = plan_setup
+    plan = make_plan(plan_setup, 29524,
+                     faults=fast_policy(request_deadline_s=1.0))
+    # attempt 0 (warm-up response) clean, attempt 1 dropped
+    inj = serving.FaultInjector(
+        serving.FaultSchedule("d1", (FaultEvent(1, "drop"),)))
+    with serving.CloudServer(plan, faults=inj):
+        with serving.connect(plan, backend="socket") as sess:
+            clean = sess.infer(x)["logits"]          # warm-up (attempt 0)
+            res = sess.infer(x)                      # response dropped
+    np.testing.assert_array_equal(res["logits"], clean)
+    assert res["fault"]["faults"] >= 1
+    assert res["fault"]["retries"] >= 1
+    assert res["fault"]["fallback"] is False
+
+
+def test_cloud_death_reconnect_bit_identical(plan_setup):
+    """Kill the cloud process mid-session, bring up a fresh one on the
+    same port: the client's retry loop reconnects (re-HELLO) and the
+    recovered logits are bit-identical to the pre-death run."""
+    _, _, _, x, _ = plan_setup
+    plan = make_plan(plan_setup, 29525, faults=fast_policy())
+    srv = serving.CloudServer(plan)
+    with serving.connect(plan, backend="socket") as sess:
+        clean = sess.infer(x)["logits"]
+        srv.kill()                                   # hard mid-stream death
+        with serving.CloudServer(plan):              # replacement process
+            res = sess.infer(x)
+        np.testing.assert_array_equal(res["logits"], clean)
+        assert res["fault"]["faults"] >= 1           # death was observed
+        assert res["fault"]["fallback"] is False
+
+
+def test_retry_exhaustion_falls_back_edge_only(plan_setup):
+    """No cloud left and the budget exhausted: the request is served
+    edge-only from the bank's c=N pair — logits bit-identical to a local
+    all-edge (c=N) deployment — and billed as a fallback."""
+    cfg, _, _, x, _ = plan_setup
+    n = len(cfg.layers)
+    plan = make_plan(plan_setup, 29526,
+                     faults=fast_policy(max_retries=1))
+    all_edge = serving.connect(
+        make_plan(plan_setup, 29526, split=n), backend="local").infer(x)
+    srv = serving.CloudServer(plan)
+    with serving.connect(plan, backend="socket") as sess:
+        srv.kill()
+        res = sess.infer(x)
+    np.testing.assert_array_equal(res["logits"], all_edge["logits"])
+    assert res["fault"]["fallback"] is True
+    assert res["fault"]["retries"] == 1              # budget fully spent
+    assert res["tx_bytes"] == 0                      # nothing on the wire
+    assert res["t_total"] is not None
+
+
+def test_fallback_fail_mode_raises(plan_setup):
+    _, _, _, x, _ = plan_setup
+    plan = make_plan(plan_setup, 29527,
+                     faults=fast_policy(max_retries=0, fallback="fail"))
+    srv = serving.CloudServer(plan)
+    with serving.connect(plan, backend="socket") as sess:
+        srv.kill()
+        with pytest.raises(OSError):
+            sess.infer(x)
+
+
+def test_dead_cloud_read_raises_typed_timeout(plan_setup):
+    """The historical bug: a cloud that accepts but never answers used
+    to block ``infer`` forever. The deadline now surfaces it as
+    ``RequestTimeout``."""
+    cfg, params, masks, x, _ = plan_setup
+
+    def black_hole(srv, stop):
+        conn, _ = srv.accept()
+        stop.wait(10)                      # read nothing, answer nothing
+        conn.close()
+
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", 29528))
+    srv.listen(1)
+    stop = threading.Event()
+    t = threading.Thread(target=black_hole, args=(srv, stop), daemon=True)
+    t.start()
+    try:
+        client = EdgeClient(
+            params, cfg, SPLIT, 29528, masks=masks, compact=True,
+            codec="fp32",
+            fault_policy=fast_policy(max_retries=0, fallback="fail",
+                                     request_deadline_s=0.3))
+        with pytest.raises(serving.RequestTimeout):
+            client.infer(x)
+    finally:
+        stop.set()
+        srv.close()
+        t.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# outage-aware adaptive control
+# ---------------------------------------------------------------------------
+def test_outage_resplits_to_edge_and_heals_back(plan_setup):
+    """The degradation ladder end-to-end: an outage collapses the
+    bandwidth estimate, the controller re-splits to c=N (adopted locally
+    — the wire is down), and once a fresh cloud serves again the healthy
+    observations pull the partition back toward offloading."""
+    cfg, _, _, x, want = plan_setup
+    n = len(cfg.layers)
+    pol = serving.AdaptivePolicy(candidates=(SPLIT, n), ewma_alpha=1.0,
+                                 min_samples=1, hysteresis=0.0, dwell=1)
+    # a device slow enough (and an RTT small enough) that offloading at
+    # SPLIT beats all-edge whenever the link is healthy — so heal-back
+    # is the provably optimal decision, not a coin flip on a tiny net
+    weak_edge = TwoTierProfile(
+        ComputeProfile("weak edge", flops_per_s=1e8, mem_bw=1e8,
+                       overhead_s=1e-3),
+        PAPER_SERVER, LinkProfile("lan", bandwidth=100e6 / 8, rtt_s=1e-4))
+    plan = make_plan(plan_setup, 29529, adaptive=pol, profile=weak_edge,
+                     faults=fast_policy(max_retries=1))
+    srv = serving.CloudServer(plan)
+    sess = serving.connect(plan, backend="socket")
+    try:
+        assert sess.infer(x)["fault"]["fallback"] is False
+        srv.kill()
+        res = sess.infer(x)                          # outage: edge-only
+        assert res["fault"]["fallback"] is True
+        np.testing.assert_allclose(res["logits"], want,
+                                   rtol=1e-4, atol=1e-4)
+        assert sess.split == n                       # bandwidth→0 decision
+        assert sess.switches and sess.switches[-1].new_split == n
+        with serving.CloudServer(plan):              # the link heals
+            healed = sess.infer(x)                   # reconnect + re-RESPLIT
+            assert healed["fault"]["fallback"] is False
+            again = sess.infer(x)                    # healthy observation in
+            assert again["fault"] == {"faults": 0, "retries": 0,
+                                      "fallback": False}
+            assert sess.split == SPLIT               # healed back
+            np.testing.assert_allclose(again["logits"], want,
+                                       rtol=1e-4, atol=1e-4)
+    finally:
+        sess.close()
+
+
+# ---------------------------------------------------------------------------
+# heartbeats, reaping, graceful drain
+# ---------------------------------------------------------------------------
+def test_heartbeat_keeps_idle_client_alive_and_silence_reaps(plan_setup):
+    _, _, _, x, _ = plan_setup
+    hb = 0.05
+    plan = make_plan(plan_setup, 29530,
+                     faults=fast_policy(heartbeat_s=hb))
+    with serving.CloudServer(plan) as srv:
+        with serving.connect(plan, backend="socket") as sess:
+            sess.infer(x)
+            for _ in range(4):                  # idle, but heartbeating
+                time.sleep(hb)
+                sess._client.heartbeat()
+            res = sess.infer(x)                 # connection still alive
+            assert res["fault"]["faults"] == 0
+            assert srv.fault_stats.get("heartbeats", 0) >= 4
+            # now go silent past the 3*heartbeat window: the cloud reaps
+            # the connection and the next request recovers on a fresh
+            # one (baseline-relative: the first request's jit compile
+            # may already have cost an earlier connection its slot)
+            base = srv.fault_stats.get("reaped_conns", 0)
+            deadline = time.monotonic() + 5.0
+            while (srv.fault_stats.get("reaped_conns", 0) <= base
+                   and time.monotonic() < deadline):
+                time.sleep(hb)
+            assert srv.fault_stats.get("reaped_conns", 0) > base
+            res = sess.infer(x)
+            assert res["fault"]["faults"] >= 1      # reap observed, retried
+            assert res["fault"]["fallback"] is False
+
+
+def test_graceful_drain_flushes_batched_requests(plan_setup):
+    """Stopping a batching cloud is a drain, not a crash: every in-flight
+    batched response is flushed (correct logits), no future is abandoned,
+    and every lane queue ends empty."""
+    _, _, _, x, want = plan_setup
+    plan = make_plan(plan_setup, 29531,
+                     batching=serving.BatchingPolicy(max_batch=4,
+                                                     max_wait_ms=2.0),
+                     faults=fast_policy())
+    srv = serving.CloudServer(plan)
+    sess = serving.connect(plan, backend="socket")
+    try:
+        out = sess.infer_many([x] * 8)          # pipelined through batcher
+        assert len(out) == 8
+        for r in out:
+            np.testing.assert_allclose(r["logits"], want,
+                                       rtol=1e-4, atol=1e-4)
+    finally:
+        sess.close()
+        srv.stop()
+    assert srv.fault_stats.get("abandoned_futures", 0) == 0
+    lanes = {k: v for k, v in srv.batch_stats.items()
+             if isinstance(v, dict) and "pending" in v}
+    assert lanes                                 # the engine really served
+    for k, stats in lanes.items():
+        assert stats["pending"] == 0, k
+        assert stats.get("failed_rows", 0) == 0, k

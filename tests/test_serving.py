@@ -127,8 +127,11 @@ def test_three_backends_bit_identical_logits(plan_setup):
 
     for res in (local, stream, sock):      # uniform result shape
         assert set(res) == {"logits", "t_edge", "t_upstream", "t_total",
-                            "tx_bytes", "e_edge_j"}
+                            "tx_bytes", "e_edge_j", "fault"}
         assert res["e_edge_j"] is None     # un-metered plan: no joules
+        # uniform fault accounting: all-zero on a clean request
+        assert res["fault"] == {"faults": 0, "retries": 0,
+                                "fallback": False}
 
 
 def test_streaming_backend_reports_pipeline_stats(plan_setup):
