@@ -1,4 +1,14 @@
-"""Shared benchmark plumbing: result records + pretty tables + JSON dump."""
+"""Shared benchmark plumbing: result records + pretty tables + JSON dump.
+
+Record naming scheme (``experiments/bench/``): every file this module
+writes is ``BENCH_<name>.json`` — ``save_result`` enforces the prefix,
+so a raw per-benchmark dump (``BENCH_cloud_batching.json``) and the
+distilled tracked records the ``write_*_record`` helpers own
+(``BENCH_collab.json`` / ``BENCH_energy.json`` / ``BENCH_faults.json``
+/ ``BENCH_fleet.json``) follow one convention instead of the historical
+mix of bare and prefixed names. The distilled records are the ones
+ROADMAP.md / docs/benchmarks.md reference, git tracks, and CI uploads.
+"""
 from __future__ import annotations
 
 import json
@@ -11,9 +21,15 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 
 def save_result(name: str, payload: Dict) -> str:
+    """Dump one record as ``experiments/bench/BENCH_<name>.json`` (the
+    prefix is added unless already present). Adds ``benchmark`` and a
+    wall-clock ``timestamp`` — determinism comparisons must exclude
+    ``timestamp``, and benchmark payloads must never carry wall-clock
+    values of their own."""
     os.makedirs(OUT_DIR, exist_ok=True)
     payload = dict(payload, benchmark=name, timestamp=time.time())
-    fn = os.path.join(OUT_DIR, f"{name}.json")
+    stem = name if name.startswith("BENCH_") else f"BENCH_{name}"
+    fn = os.path.join(OUT_DIR, f"{stem}.json")
     with open(fn, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return fn
@@ -100,6 +116,27 @@ def write_faults_record(fault_injection: Dict) -> str:
     rec["cloud_death_recovery_s"] = (
         fault_injection["cloud_death"]["recovery_s"])
     return save_result("BENCH_faults", rec)
+
+
+def write_fleet_record(fleet_sim: Dict) -> str:
+    """The tracked fleet-simulation record, ``BENCH_fleet.json``: the
+    headline scenario's full rollup (fleet p50/p99, joules/request,
+    deadline attainment, per-tier shed/utilization/queue metrics — all
+    virtual-clock, so bit-identical across same-seed runs) plus the
+    sweep's per-cell summary keys. Written by ``benchmarks.fleet_sim``
+    run with ``--json``/``--smoke`` (the CI path) or by
+    ``benchmarks.run --json``; CI uploads it next to the other BENCH
+    records."""
+    rec: Dict = dict(fleet_sim["headline"])
+    rec["determinism_ok"] = fleet_sim["determinism_ok"]
+    for row in fleet_sim["rows"]:
+        k = (f"{row['slo_mix']}_{row['n_edges']}edges"
+             f"_{row['n_cloudlets']}cl")
+        rec[f"{k}_deadline_met_frac"] = row["deadline_met_frac"]
+        rec[f"{k}_shed_frac"] = row["shed_frac"]
+        rec[f"{k}_latency_p99_s"] = row["latency_p99_s"]
+        rec[f"{k}_cloud_util"] = row["cloud_util"]
+    return save_result("BENCH_fleet", rec)
 
 
 def table(rows: List[Dict], cols: List[str], title: str = "") -> str:

@@ -12,10 +12,11 @@ import traceback
 
 from benchmarks import (adaptive_split, cloud_batching, collab_throughput,
                         energy_split, fault_injection, fig4_layerwise,
-                        fig5_methods, kernels_bench, roofline_report,
-                        table1_accuracy, table2_split_latency)
+                        fig5_methods, fleet_sim, kernels_bench,
+                        roofline_report, table1_accuracy,
+                        table2_split_latency)
 from benchmarks.common import (write_collab_record, write_energy_record,
-                               write_faults_record)
+                               write_faults_record, write_fleet_record)
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
@@ -26,6 +27,7 @@ BENCHES = [
     ("adaptive_split", adaptive_split.run),
     ("energy_split", energy_split.run),
     ("fault_injection", fault_injection.run),
+    ("fleet_sim", fleet_sim.run),
     ("kernels", kernels_bench.run),
     ("table1_accuracy", table1_accuracy.run),
     ("roofline", roofline_report.run),
@@ -66,6 +68,8 @@ def main() -> None:
     if args.json and "fault_injection" in results:
         print("perf record: "
               f"{write_faults_record(results['fault_injection'])}")
+    if args.json and "fleet_sim" in results:
+        print(f"perf record: {write_fleet_record(results['fleet_sim'])}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

@@ -43,7 +43,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import CNNConfig
-from repro.core.partition.energy_model import EnergyPolicy
+from repro.core.partition.energy_model import (EnergyPolicy,
+                                               urgency_scaled_weight)
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
                                                 compacted_cnn_layer_costs,
@@ -243,14 +244,14 @@ class AdaptiveSplitController:
         budget is armed. A full battery optimizes latency; at half
         charge the device already pays 4x more seconds per joule saved,
         so the walk toward the low-energy splits happens while there is
-        still meaningful budget left, not at the moment of exhaustion."""
+        still meaningful budget left, not at the moment of exhaustion.
+        The curve itself is ``energy_model.urgency_scaled_weight`` —
+        one formula shared with the fleet simulator's per-edge split
+        decisions."""
         if self.energy is None:
             return 0.0
-        w = self.energy.energy_weight_s_per_j
-        frac = self.battery_fraction
-        if frac is None:
-            return w
-        return w / max(frac, 1e-3) ** 2
+        return urgency_scaled_weight(self.energy.energy_weight_s_per_j,
+                                     self.battery_fraction)
 
     def drain(self, e_edge_j: Optional[float]) -> None:
         """Subtract one request's measured edge energy from the battery

@@ -1,0 +1,26 @@
+"""Virtual-clock fleet simulation: heterogeneous edge populations,
+an edge -> cloudlet -> cloud hierarchy, SLO admission, and energy
+budgets — all priced by the same Eq. 5 / batching / trace models the
+single-edge subsystems calibrate, all bit-reproducible per seed.
+"""
+from repro.core.fleet.admission import (AdmissionController, RoutePlan,
+                                        SplitPlanner)
+from repro.core.fleet.clock import EventQueue
+from repro.core.fleet.metrics import (FleetMetrics, RequestRecord,
+                                      percentile)
+from repro.core.fleet.population import (DEVICE_CLASSES, SimEdge,
+                                         build_population)
+from repro.core.fleet.scenario import (DEFAULT_SLO_CLASSES, ArrivalPattern,
+                                       FleetScenario, SLOClass)
+from repro.core.fleet.simulator import FleetSimulator, simulate_fleet
+from repro.core.fleet.tiers import (CLOUD_SERVER, CLOUDLET_SERVER,
+                                    TierServer, TierStats, backhaul_link)
+
+__all__ = [
+    "AdmissionController", "ArrivalPattern", "CLOUD_SERVER",
+    "CLOUDLET_SERVER", "DEFAULT_SLO_CLASSES", "DEVICE_CLASSES",
+    "EventQueue", "FleetMetrics", "FleetScenario", "FleetSimulator",
+    "RequestRecord", "RoutePlan", "SLOClass", "SimEdge", "SplitPlanner",
+    "TierServer", "TierStats", "backhaul_link", "build_population",
+    "percentile", "simulate_fleet",
+]

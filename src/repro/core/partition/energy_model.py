@@ -158,6 +158,17 @@ PI_ENERGY = EnergyProfile(
     "pi", compute_power_w=5.5, idle_power_w=2.2,
     radio=RadioProfile("usb-wifi", tx_power_w=1.3, rx_power_w=0.9,
                        idle_power_w=0.1))
+#: Phone-class edge (mid-range smartphone). Calibration: a big.LITTLE
+#: SoC under sustained NN load draws ~3-4 W before thermal throttling
+#: (compute clusters + LPDDR), idles near ~0.9 W with the screen's
+#: share excluded; the Wi-Fi/LTE modem bursts ~1.2 W on TX and ~0.85 W
+#: in active RX. Between MCU (radio-dominated) and Pi (SoC-dominated):
+#: compute and radio costs are comparable, so the energy-optimal split
+#: genuinely moves with the link. Pairs with ``profiles.PHONE_EDGE``.
+PHONE_ENERGY = EnergyProfile(
+    "phone", compute_power_w=3.5, idle_power_w=0.9,
+    radio=RadioProfile("phone-modem", tx_power_w=1.2, rx_power_w=0.85,
+                       idle_power_w=0.08))
 #: the paper's i7-6700 edge box (mains-powered — energy pricing for
 #: completeness, with the 3090 server's draw as E_cloud)
 PAPER_EDGE_ENERGY = EnergyProfile(
@@ -169,8 +180,25 @@ PAPER_EDGE_ENERGY = EnergyProfile(
 ENERGY_PROFILES = {
     "mcu": MCU_ENERGY,
     "pi": PI_ENERGY,
+    "phone": PHONE_ENERGY,
     "paper_edge": PAPER_EDGE_ENERGY,
 }
+
+
+def urgency_scaled_weight(weight_s_per_j: float,
+                          battery_fraction: Optional[float],
+                          floor: float = 1e-3) -> float:
+    """The battery-urgency curve shared by the adaptive controller and
+    the fleet simulator: the static s/J exchange rate scaled by the
+    inverse *square* of the remaining battery fraction (clamped at
+    ``floor``). A full battery optimizes latency; at half charge the
+    device already pays 4x more seconds per joule saved — the walk
+    toward the low-energy splits happens while meaningful budget
+    remains, not at exhaustion. ``battery_fraction=None`` (unmetered)
+    returns the static weight unchanged."""
+    if battery_fraction is None:
+        return weight_s_per_j
+    return weight_s_per_j / max(battery_fraction, floor) ** 2
 
 
 @dataclass(frozen=True)

@@ -254,6 +254,23 @@ def _segment_time(costs: Sequence[LayerCost], idx, comp,
     return t
 
 
+def batched_segment_time(costs: Sequence[LayerCost], start: int, stop: int,
+                         comp, batch: int) -> float:
+    """Analytic time for ONE invocation running layers ``[start, stop)``
+    over ``batch`` fused rows on ``comp`` (a ``ComputeProfile``) — the
+    same per-layer roofline + once-per-call overhead formula as
+    ``split_latency``, exposed for *partial* stacks: the fleet
+    simulator's cloudlet tier runs ``[c1, c2)`` and its cloud tier
+    ``[c2, N)``, both priced here so tier numbers can never drift from
+    the two-tier model."""
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    if not 0 <= start <= stop <= len(costs):
+        raise ValueError(f"segment [{start}, {stop}) outside "
+                         f"[0, {len(costs)}]")
+    return _segment_time(costs, range(start, stop), comp, batch)
+
+
 def batched_server_time(costs: Sequence[LayerCost], c: int,
                         server, batch: int) -> float:
     """Analytic T_S for ONE cloud invocation serving ``batch`` fused
@@ -266,9 +283,7 @@ def batched_server_time(costs: Sequence[LayerCost], c: int,
     headroom the cross-client dynamic batching engine recovers; per
     request it approaches ``overhead_s``-free compute as the batching
     window fills."""
-    if batch < 1:
-        raise ValueError("batch must be >= 1")
-    return _segment_time(costs, range(c, len(costs)), server, batch)
+    return batched_segment_time(costs, c, len(costs), server, batch)
 
 
 # ---------------------------------------------------------------------------

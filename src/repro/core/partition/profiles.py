@@ -178,6 +178,26 @@ MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
 #: Pi-class single-board edge (quad A72 class, NEON fp32)
 PI_EDGE = ComputeProfile("Pi-class edge", flops_per_s=6e9,
                          mem_bw=4e9, overhead_s=2.5e-4)
+#: Phone-class edge (mid-range smartphone, big.LITTLE A7x SoC).
+#: Calibration: sustained fp32 CNN inference on the CPU/NEON path of a
+#: 2020s mid-ranger lands at a few tens of GFLOP/s (thermally throttled
+#: well below peak; NPU offload would be ~10x but is not the fp32 jnp
+#: path this repo deploys), with LPDDR4X delivering ~12 GB/s effective
+#: to a single cluster. Sits between PI_EDGE and PAPER_EDGE — the
+#: third heterogeneous class the fleet simulator mixes.
+PHONE_EDGE = ComputeProfile("phone-class edge", flops_per_s=25e9,
+                            mem_bw=12e9, overhead_s=2e-4)
+#: Jetson-class cloudlet: the aggregation box the hierarchical-FL plant
+#: disease deployments park between the field and the datacenter (an
+#: Orin-class module on a pole, not a 3090 in a rack). Calibration:
+#: ~1.2 TFLOP/s sustained dense fp32 (ampere-generation embedded GPU,
+#: thermally capped), ~60 GB/s LPDDR5, sub-ms launch overhead. Fast
+#: enough to absorb a village of edges, slow enough that an
+#: under-provisioned fleet genuinely queues — which is what the fleet
+#: simulator's cloudlet tier is for.
+CLOUDLET_SERVER = ComputeProfile("Jetson-class cloudlet",
+                                 flops_per_s=1.2e12, mem_bw=60e9,
+                                 overhead_s=1e-4)
 
 # --- Tier B: TPU v5e two-pod deployment -------------------------------------
 V5E_CHIP = ComputeProfile("TPU v5e chip", flops_per_s=197e12, mem_bw=819e9)

@@ -42,6 +42,13 @@ benchmarks comes from ``FaultSchedule``/``FaultInjector``
 ``docs/architecture.md`` and ``docs/deployment-plan.md`` for the full
 serving contract and ``docs/wire-protocol.md`` for the fault-tolerant
 framing.
+
+Fleet studies: attach ``FleetScenario(...)`` as the plan's ``fleet``
+section to pin the simulated deployment context — fleet size, device /
+trace mixes, SLO classes (each an ``SLOClass`` over a ``FaultPolicy``),
+battery budgets, diurnal ``ArrivalPattern``, cloudlet tier shape — and
+run it with ``simulate_fleet`` (``repro.core.fleet``); see
+``docs/fleet-sim.md``.
 """
 from repro.core.collab.adaptive import (AdaptivePolicy,
                                         AdaptiveSplitController,
@@ -52,6 +59,8 @@ from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
                                       fault_record)
 from repro.core.collab.protocol import (FrameIntegrityError,
                                         PlanMismatchError)
+from repro.core.fleet import (ArrivalPattern, FleetScenario, FleetSimulator,
+                              SLOClass, simulate_fleet)
 from repro.core.partition.energy_model import (ENERGY_PROFILES, MCU_ENERGY,
                                                PAPER_EDGE_ENERGY, PI_ENERGY,
                                                EnergyPolicy, EnergyProfile,
@@ -76,4 +85,6 @@ __all__ = [
     "FaultPolicy", "FaultSchedule", "FaultEvent", "FaultInjector",
     "RequestTimeout", "FrameIntegrityError", "fault_record",
     "FAULT_SCHEDULES",
+    "ArrivalPattern", "FleetScenario", "FleetSimulator", "SLOClass",
+    "simulate_fleet",
 ]

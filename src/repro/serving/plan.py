@@ -77,6 +77,16 @@ silent for ``3 * heartbeat_s``. Like the other optional sections,
 ``faults`` folds into the digest **only when set**, so pre-fault plans
 keep their digests byte-for-byte.
 
+**Fleet plans**: setting ``fleet=FleetScenario(...)`` attaches the
+simulated deployment context (``repro.core.fleet``) the plan is being
+evaluated for: fleet size, heterogeneous device/trace mixes, battery
+budgets, SLO classes, and the cloudlet tier's shape. The section is
+descriptive — it configures the fleet simulator, not the socket peers —
+but it follows the same only-when-set digest rule as the other
+sections: a plan exported *for* a specific fleet study pins that
+scenario in its contract (so two artifacts claiming the same study are
+comparable), while plans without one keep their digests byte-for-byte.
+
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
 from __future__ import annotations
@@ -97,6 +107,7 @@ from repro.core.collab.adaptive import AdaptivePolicy
 from repro.core.collab.batching import BatchingPolicy
 from repro.core.collab.faults import FaultPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
+from repro.core.fleet.scenario import FleetScenario
 from repro.core.partition.energy_model import EnergyPolicy
 from repro.core.partition.latency_model import (cnn_input_bytes,
                                                 cnn_layer_costs,
@@ -162,6 +173,7 @@ class DeploymentPlan:
     batching: Optional[BatchingPolicy] = None
     energy: Optional[EnergyPolicy] = None
     faults: Optional[FaultPolicy] = None
+    fleet: Optional[FleetScenario] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -276,6 +288,8 @@ class DeploymentPlan:
             doc["energy"] = self.energy.to_json()
         if self.faults is not None:
             doc["faults"] = self.faults.to_json()
+        if self.fleet is not None:
+            doc["fleet"] = self.fleet.to_json()
         return doc
 
     @property
@@ -310,6 +324,8 @@ class DeploymentPlan:
                           if self.energy else None),
                "faults": (self.faults.to_json()
                           if self.faults else None),
+               "fleet": (self.fleet.to_json()
+                         if self.fleet else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -338,6 +354,8 @@ class DeploymentPlan:
                   if doc.get("energy") else None)
         faults = (FaultPolicy.from_json(doc["faults"])
                   if doc.get("faults") else None)
+        fleet = (FleetScenario.from_json(doc["fleet"])
+                 if doc.get("fleet") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -346,7 +364,7 @@ class DeploymentPlan:
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
                    batching=batching, energy=energy, faults=faults,
-                   version=doc["version"])
+                   fleet=fleet, version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -375,9 +393,12 @@ class DeploymentPlan:
         tol = (f", faults: retries<={self.faults.max_retries}"
                f" fallback={self.faults.fallback}"
                if self.faults else "")
+        flt = (f", fleet={self.fleet.name}"
+               f"({self.fleet.n_edges}x{self.fleet.n_cloudlets})"
+               if self.fleet else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name}){adapt}{batch}{joule}{tol}")
+                f"({self.profile.link.name}){adapt}{batch}{joule}{tol}{flt}")

@@ -101,6 +101,53 @@ def test_sim_channel_advance_moves_the_clock_without_bytes():
     assert ch.sent_bytes == 200_000
 
 
+def test_sim_channel_send_spans_many_segments():
+    # three finite segments then a terminal one; one send drains all
+    # four piecewise: 1 MB @ 1 MB/s + 0.5 MB @ 0.5 MB/s + 0.2 MB @
+    # 0.2 MB/s + the remaining 0.3 MB @ 0.1 MB/s
+    tr = LinkTrace("t", (TraceSegment(1.0, 1e6, 0.0),
+                         TraceSegment(1.0, 5e5, 0.0),
+                         TraceSegment(1.0, 2e5, 0.0),
+                         TraceSegment(float("inf"), 1e5, 0.0)))
+    ch = SimChannel(LinkProfile("unused", bandwidth=1.0), trace=tr)
+    t = ch.send(2_000_000)
+    assert t == pytest.approx(1.0 + 1.0 + 1.0 + 3e5 / 1e5)
+    assert ch.elapsed_s == pytest.approx(t)
+
+
+def test_sim_channel_looping_trace_wraps_past_the_end():
+    # 1 s fast + 1 s slow, looping: a send launched 0.5 s before the
+    # trace end pays 0.5 s of fast bandwidth, wraps, and keeps draining
+    # from the schedule's start — the wrap must not reset or stall
+    tr = LinkTrace("loop", (TraceSegment(1.0, 1e6, 0.0),
+                            TraceSegment(1.0, 1e5, 0.0)), loop=True)
+    ch = SimChannel(LinkProfile("unused", bandwidth=1.0), trace=tr)
+    ch.advance(1.5)            # mid slow segment, 0.5 s before the wrap
+    # 0.5 s * 0.1 MB/s = 50 KB in the slow tail, then 150 KB at the
+    # wrapped-around fast segment
+    t = ch.send(200_000)
+    assert t == pytest.approx(0.5 + 150_000 / 1e6)
+    # after the wrap the clock sits inside cycle 2's fast segment
+    assert ch.send(100_000) == pytest.approx(0.1)
+
+
+def test_sim_channel_advance_interleaved_with_sends():
+    # alternating compute (advance) and tx (send) must walk the same
+    # piecewise schedule as one continuous clock
+    tr = LinkTrace("t", (TraceSegment(1.0, 1e6, 0.0),
+                         TraceSegment(1.0, 2e5, 0.0),
+                         TraceSegment(float("inf"), 5e4, 0.0)))
+    ch = SimChannel(LinkProfile("unused", bandwidth=1.0), trace=tr)
+    assert ch.send(500_000) == pytest.approx(0.5)   # t: 0 -> 0.5, fast
+    ch.advance(0.5)                                 # t = 1.0: slow starts
+    # 0.1 MB at 0.2 MB/s
+    assert ch.send(100_000) == pytest.approx(0.5)   # t -> 1.5
+    ch.advance(0.5)                                 # t = 2.0: crawl starts
+    assert ch.send(50_000) == pytest.approx(1.0)    # 50 KB at 50 KB/s
+    assert ch.elapsed_s == pytest.approx(3.0)
+    assert ch.sent_bytes == 650_000
+
+
 # ---------------------------------------------------------------------------
 # estimator + controller
 # ---------------------------------------------------------------------------
