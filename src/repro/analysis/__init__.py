@@ -1,0 +1,35 @@
+"""AST-based correctness gate for the collaborative serving stack.
+
+The serving stack carries two kinds of invariants that convention alone
+cannot hold: *concurrency* invariants (every shared-mutable attribute
+written under its lock — the threaded ``serve_cloud`` accept loop,
+per-lane batcher schedulers and per-connection writer threads all
+mutate state concurrently) and *determinism* invariants (the fleet
+simulator's same-seed bit-identity dies on the first ``time.time()`` or
+module-level ``random`` call inside the virtual-clock domain). This
+package makes both — plus the wire/plan serialization contracts —
+machine-checked properties, using only the stdlib ``ast`` module:
+
+* ``repro.analysis.concurrency`` — lock-discipline over an annotated
+  registry of shared state (``repro.analysis.registry``);
+* ``repro.analysis.purity`` — virtual-clock purity for ``core/fleet/``,
+  ``SimChannel`` and ``LinkTrace``;
+* ``repro.analysis.contracts`` — unit-suffixed plan-JSON keys, the
+  ``DeploymentPlan`` digest fold-only-when-set rule, and
+  ``struct.pack``/``unpack`` twin formats in the wire codec;
+* ``repro.analysis.baseline`` — justified suppressions, with staleness
+  and missing-justification themselves reported as findings;
+* ``repro.analysis.runner`` — dispatch + the aggregate ``Report``.
+
+Run the gate with ``python -m repro.analysis`` (``--json``, ``--out``,
+``--baseline``; non-zero exit on unsuppressed findings) or through the
+pytest gate in ``tests/test_analysis.py``. Semantics and the suppression
+workflow are documented in ``docs/static-analysis.md``.
+"""
+from repro.analysis.baseline import (BaselineEntry, apply_baseline,
+                                     load_baseline)
+from repro.analysis.findings import Finding
+from repro.analysis.runner import Report, analyze_file, run_analysis
+
+__all__ = ["Finding", "Report", "BaselineEntry", "analyze_file",
+           "run_analysis", "load_baseline", "apply_baseline"]

@@ -1,0 +1,58 @@
+"""CLI for the static-analysis gate: ``python -m repro.analysis``.
+
+Default target is the repo's ``src/`` tree; default baseline is
+``analysis_baseline.json`` at the repo root (when present). Exits
+non-zero when unsuppressed findings remain, so CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.runner import run_analysis
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def main(argv=None) -> int:
+    """Parse args, run the gate, print the report, return the exit
+    code (0 = green, 1 = unsuppressed findings)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based correctness gate: lock discipline, "
+                    "virtual-clock purity, serialization contracts")
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(_REPO, "src")],
+                    help="files/directories to analyze (default: src/)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON on stdout")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this file")
+    ap.add_argument("--baseline",
+                    default=os.path.join(_REPO, "analysis_baseline.json"),
+                    help="suppression file (default: repo "
+                         "analysis_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report everything")
+    args = ap.parse_args(argv)
+
+    report = run_analysis(
+        args.paths, baseline_path=None if args.no_baseline
+        else args.baseline)
+    doc = report.to_json()
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+    if args.json:
+        print(json.dumps(doc, indent=2))
+    else:
+        print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

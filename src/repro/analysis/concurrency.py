@@ -1,0 +1,327 @@
+"""Lock-discipline checker: shared-mutable writes vs. their locks.
+
+Three clauses, all lexical (no runtime instrumentation):
+
+1. **lock-discipline** — a registry-annotated attribute with a guarding
+   lock must have every write outside ``__init__`` lexically inside a
+   ``with self.<lock>:`` (or ``with <lock>:`` for closures) block.
+   ``__init__`` is exempt: construction happens-before publication to
+   any other thread.
+2. **unguarded-shared-write** — in a class that spawns threads
+   (``threading.Thread(target=...)``), any ``self.<attr>`` write inside
+   a method lexically reachable from a thread entry point (via the
+   ``self.m()`` call graph) that is neither registry-annotated nor
+   inside *some* ``with`` block is flagged: it is cross-thread mutable
+   state nobody has claimed.
+3. **stale-registry** — a registry entry whose class, attribute, lock or
+   function no longer exists in the source is itself a finding, so the
+   annotations cannot rot; ``lock=None`` (single-thread ownership)
+   entries additionally require a non-empty justification note
+   (**registry-justification**).
+
+Writes tracked: plain/augmented/annotated assignment to ``self.attr``
+and subscript stores through it (``self.cache[k] = v``). Mutations via
+method calls (``self.history.append(x)``) and writes through non-self
+aliases are out of lexical reach — the registry's ownership notes are
+where those contracts get documented.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import ClosureVar, SharedAttr
+
+
+# ---------------------------------------------------------------------------
+# lexical helpers
+# ---------------------------------------------------------------------------
+def _lock_name(expr: ast.expr) -> Optional[str]:
+    """The lock name a ``with`` context expression acquires, if it looks
+    like one we can track: ``self.X`` -> ``X``, bare ``name`` ->
+    ``name``."""
+    if isinstance(expr, ast.Attribute) and \
+            isinstance(expr.value, ast.Name) and expr.value.id == "self":
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def _self_attrs_in_target(t: ast.expr) -> List[str]:
+    """Attribute names of ``self`` written by one assignment target."""
+    if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+            and t.value.id == "self":
+        return [t.attr]
+    if isinstance(t, ast.Subscript):
+        return _self_attrs_in_target(t.value)
+    if isinstance(t, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in t.elts:
+            out.extend(_self_attrs_in_target(elt))
+        return out
+    if isinstance(t, ast.Starred):
+        return _self_attrs_in_target(t.value)
+    return []
+
+
+def _assign_targets(node: ast.AST) -> List[ast.expr]:
+    if isinstance(node, ast.Assign):
+        return list(node.targets)
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    return []
+
+
+def iter_writes_with_locks(fn: ast.AST):
+    """Yield ``(attr, node, locks)`` for every ``self.<attr>`` write
+    lexically inside ``fn`` (descending into nested defs, which inherit
+    the enclosing with-stack — a nested body *defined* under a lock may
+    still run without it, but the registry's owned entries are the place
+    to annotate that, and the common case here is plain lock bodies)."""
+    out: List[Tuple[str, ast.AST, frozenset]] = []
+
+    def visit(node: ast.AST, locks: frozenset) -> None:
+        if isinstance(node, ast.With):
+            held = set(locks)
+            for item in node.items:
+                name = _lock_name(item.context_expr)
+                if name is not None:
+                    held.add(name)
+            for child in node.body:
+                visit(child, frozenset(held))
+            return
+        for t in _assign_targets(node):
+            for attr in _self_attrs_in_target(t):
+                out.append((attr, node, locks))
+        for child in ast.iter_child_nodes(node):
+            visit(child, locks)
+
+    for stmt in getattr(fn, "body", []):
+        visit(stmt, frozenset())
+    return out
+
+
+def _iter_name_writes(fn: ast.AST, var: str):
+    """Yield ``(node, locks)`` for writes to closure name ``var``
+    (assignment or subscript store) anywhere inside ``fn``."""
+    out: List[Tuple[ast.AST, frozenset]] = []
+
+    def hits(t: ast.expr) -> bool:
+        if isinstance(t, ast.Name) and t.id == var:
+            return True
+        if isinstance(t, ast.Subscript):
+            return hits(t.value)
+        if isinstance(t, (ast.Tuple, ast.List)):
+            return any(hits(e) for e in t.elts)
+        return False
+
+    def visit(node: ast.AST, locks: frozenset) -> None:
+        if isinstance(node, ast.With):
+            held = set(locks)
+            for item in node.items:
+                name = _lock_name(item.context_expr)
+                if name is not None:
+                    held.add(name)
+            for child in node.body:
+                visit(child, frozenset(held))
+            return
+        if any(hits(t) for t in _assign_targets(node)):
+            out.append((node, locks))
+        for child in ast.iter_child_nodes(node):
+            visit(child, locks)
+
+    for stmt in getattr(fn, "body", []):
+        visit(stmt, frozenset())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# thread reachability
+# ---------------------------------------------------------------------------
+def _spawns_thread(fn: ast.AST) -> bool:
+    """True when ``fn`` lexically constructs a ``threading.Thread``."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "Thread":
+            return True
+        if isinstance(f, ast.Name) and f.id == "Thread":
+            return True
+    return False
+
+
+def _method_refs(fn: ast.AST, methods: Set[str]) -> Set[str]:
+    """Method names referenced (not directly called) via ``self.m`` in
+    ``fn`` — the thread-target heuristic: ``target=self._loop`` and
+    ``for f in (self._a, self._b)`` both reference without calling."""
+    called_funcs = {id(n.func) for n in ast.walk(fn)
+                    if isinstance(n, ast.Call)}
+    refs: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self" and node.attr in methods and \
+                id(node) not in called_funcs:
+            refs.add(node.attr)
+    return refs
+
+
+def _self_calls(fn: ast.AST, methods: Set[str]) -> Set[str]:
+    """Methods invoked as ``self.m(...)`` inside ``fn``."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id == "self" and \
+                node.func.attr in methods:
+            out.add(node.func.attr)
+    return out
+
+
+def _thread_reachable(cls_methods: Dict[str, ast.AST]) -> Set[str]:
+    """Methods lexically reachable from any thread entry point of the
+    class (empty when the class spawns no threads)."""
+    names = set(cls_methods)
+    entries: Set[str] = set()
+    for name, fn in cls_methods.items():
+        if _spawns_thread(fn):
+            entries |= _method_refs(fn, names)
+    seen: Set[str] = set()
+    frontier = list(entries)
+    while frontier:
+        m = frontier.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        frontier.extend(_self_calls(cls_methods[m], names) - seen)
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# the checker
+# ---------------------------------------------------------------------------
+def _class_defs(tree: ast.Module) -> Dict[str, ast.ClassDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+
+
+def _func_defs(tree: ast.Module) -> Dict[str, ast.AST]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _methods(cls: ast.ClassDef) -> Dict[str, ast.AST]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _attr_exists(cls: ast.ClassDef, attr: str) -> bool:
+    """The attribute is a class-level annotation/assignment (dataclass
+    field) or a ``self.<attr>`` write somewhere in the class."""
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                node.target.id == attr:
+            return True
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == attr
+                for t in node.targets):
+            return True
+    for node in ast.walk(cls):
+        for t in _assign_targets(node):
+            if attr in _self_attrs_in_target(t):
+                return True
+    return False
+
+
+def check_concurrency(tree: ast.Module, path: str,
+                      entries: Iterable) -> List[Finding]:
+    """Run all three clauses over one module. ``entries`` is the
+    registry's tuple of ``SharedAttr``/``ClosureVar`` for this path."""
+    findings: List[Finding] = []
+    classes = _class_defs(tree)
+    functions = _func_defs(tree)
+    entries = tuple(entries)
+
+    attr_entries = [e for e in entries if isinstance(e, SharedAttr)]
+    closure_entries = [e for e in entries if isinstance(e, ClosureVar)]
+    registered: Dict[Tuple[str, str], SharedAttr] = {
+        (e.cls, e.attr): e for e in attr_entries}
+
+    # clause 3: registry drift + ownership justification
+    for e in attr_entries:
+        sym = f"{e.cls}.{e.attr}"
+        cls = classes.get(e.cls)
+        if cls is None:
+            findings.append(Finding(
+                "stale-registry", path, 1, sym,
+                f"registered class {e.cls!r} no longer exists"))
+            continue
+        if not _attr_exists(cls, e.attr):
+            findings.append(Finding(
+                "stale-registry", path, cls.lineno, sym,
+                f"registered attribute {e.attr!r} is never written in "
+                f"{e.cls}"))
+        if e.lock is None and not e.note.strip():
+            findings.append(Finding(
+                "registry-justification", path, cls.lineno, sym,
+                "single-thread-ownership entry carries no justification "
+                "note"))
+        if e.lock is not None and not _attr_exists(cls, e.lock):
+            findings.append(Finding(
+                "stale-registry", path, cls.lineno, sym,
+                f"guarding lock {e.lock!r} is never assigned in {e.cls}"))
+    for e in closure_entries:
+        sym = f"{e.func}.{e.var}"
+        fn = functions.get(e.func)
+        if fn is None:
+            findings.append(Finding(
+                "stale-registry", path, 1, sym,
+                f"registered function {e.func!r} no longer exists"))
+        if e.lock is None and not e.note.strip():
+            findings.append(Finding(
+                "registry-justification", path,
+                fn.lineno if fn is not None else 1, sym,
+                "single-thread-ownership entry carries no justification "
+                "note"))
+
+    # clauses 1 + 2, per class
+    for cname, cls in classes.items():
+        methods = _methods(cls)
+        reachable = _thread_reachable(methods)
+        for mname, fn in methods.items():
+            if mname == "__init__":
+                continue
+            for attr, node, locks in iter_writes_with_locks(fn):
+                sym = f"{cname}.{mname}"
+                entry = registered.get((cname, attr))
+                if entry is not None:
+                    if entry.lock is not None and entry.lock not in locks:
+                        findings.append(Finding(
+                            "lock-discipline", path, node.lineno,
+                            f"{cname}.{attr}",
+                            f"write in {sym} is outside "
+                            f"`with self.{entry.lock}:`"))
+                elif mname in reachable and not locks:
+                    findings.append(Finding(
+                        "unguarded-shared-write", path, node.lineno,
+                        f"{cname}.{attr}",
+                        f"cross-thread write in {sym} (reachable from a "
+                        f"thread entry point) has no guarding lock and no "
+                        f"registry annotation"))
+
+    # clause 1 for closures: registered vars in module-level functions
+    for e in closure_entries:
+        fn = functions.get(e.func)
+        if fn is None or e.lock is None:
+            continue
+        for node, locks in _iter_name_writes(fn, e.var):
+            if e.lock not in locks:
+                findings.append(Finding(
+                    "lock-discipline", path, node.lineno,
+                    f"{e.func}.{e.var}",
+                    f"closure write is outside `with {e.lock}:`"))
+    return findings

@@ -1,0 +1,290 @@
+"""Serialization-contract linter: units, digest folds, wire twins.
+
+Three clauses:
+
+1. **unit-suffix** — in the registered policy classes' ``to_json``
+   methods, every JSON key whose name carries a physical-quantity stem
+   (wait, deadline, backoff, duration, rtt, latency, battery, energy,
+   bytes, bandwidth, rate, period, power, ...) must end with an
+   approved unit suffix (``_s``, ``_ms``, ``_j``, ``_bytes``, ``_bps``,
+   ``_mbps``, ``_hz``, ``_w``, ``_s_per_j``, ...) or an explicitly
+   dimensionless one (``_jitter``, ``_frac``, ``_alpha``, ``_weight``,
+   ``_amplitude``, ``_share``, ``_scale``, ``_ratio``). An ambiguous
+   key like ``upload_wait`` is exactly the bug this kills: seconds or
+   milliseconds is a wire-contract question, not a reader's guess.
+2. **digest-fold** — every registered optional ``DeploymentPlan``
+   section must be folded into the contract dict *only* under a literal
+   ``if self.<section> is not None:`` guard, and every registered
+   section must be folded somewhere: an unguarded fold makes two plans
+   with and without the section digest-identical, a missing fold lets
+   peers disagree silently.
+3. **pack-unpack** — in the wire codec module, every ``struct.pack``
+   format (literal or f-string, normalized with ``{}`` placeholders)
+   must have a byte-compatible ``struct.unpack``/``unpack_from`` twin,
+   and every module-level ``Struct`` constant whose ``.pack`` is used
+   must also have its ``.unpack*`` used — a pack without a decoder twin
+   is a frame nobody can read back (or worse, reads back by hand with
+   silently drifting offsets).
+"""
+from __future__ import annotations
+
+import ast
+import struct as _struct
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# clause 1: unit suffixes
+# ---------------------------------------------------------------------------
+QUANTITY_STEMS = ("wait", "deadline", "backoff", "heartbeat", "duration",
+                  "timeout", "interval", "rtt", "latency", "busy",
+                  "elapsed", "battery", "energy", "joule", "watt",
+                  "power", "bytes", "bandwidth", "backhaul", "rate",
+                  "period", "freq")
+UNIT_SUFFIXES = ("_s", "_ms", "_us", "_ns", "_hz", "_khz", "_mhz", "_j",
+                 "_mj", "_w", "_mw", "_bytes", "_bits", "_bps", "_kbps",
+                 "_mbps", "_gbps", "_s_per_j", "_j_per_s", "_per_s",
+                 "_per_req")
+DIMENSIONLESS_SUFFIXES = ("_jitter", "_frac", "_fraction", "_amplitude",
+                          "_alpha", "_weight", "_scale", "_share",
+                          "_ratio", "_count", "_mix")
+
+
+def key_needs_suffix(key: str) -> bool:
+    """True when ``key`` names a physical quantity but carries neither a
+    unit suffix nor a dimensionless exemption."""
+    k = key.lower()
+    if k.endswith(UNIT_SUFFIXES) or k.endswith(DIMENSIONLESS_SUFFIXES):
+        return False
+    return any(stem in k for stem in QUANTITY_STEMS)
+
+
+def _dict_keys_in(fn: ast.AST) -> List[Tuple[str, int]]:
+    """String keys of every dict literal and ``d["k"] = ...`` store
+    inside ``fn``, with line numbers."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.append((k.value, k.lineno))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.slice, ast.Constant) and \
+                        isinstance(t.slice.value, str):
+                    out.append((t.slice.value, t.lineno))
+    return out
+
+
+def check_unit_suffixes(tree: ast.Module, path: str,
+                        classes: Iterable[str]) -> List[Finding]:
+    """Clause 1 over one module's registered ``to_json`` surfaces; a
+    registered class without a ``to_json`` (or missing entirely) is a
+    ``stale-registry`` finding."""
+    findings: List[Finding] = []
+    defs = {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+    for cname in classes:
+        cls = defs.get(cname)
+        if cls is None:
+            findings.append(Finding(
+                "stale-registry", path, 1, cname,
+                f"registered serializable class {cname!r} no longer "
+                f"exists"))
+            continue
+        to_json = next((n for n in cls.body
+                        if isinstance(n, ast.FunctionDef)
+                        and n.name == "to_json"), None)
+        if to_json is None:
+            findings.append(Finding(
+                "stale-registry", path, cls.lineno, cname,
+                f"registered serializable class {cname} has no to_json"))
+            continue
+        for key, lineno in _dict_keys_in(to_json):
+            if key_needs_suffix(key):
+                findings.append(Finding(
+                    "unit-suffix", path, lineno,
+                    f"{cname}.to_json:{key}",
+                    f"JSON key {key!r} names a physical quantity but "
+                    f"carries no unit suffix "
+                    f"({'/'.join(UNIT_SUFFIXES[:6])}/...)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# clause 2: digest fold-only-when-set
+# ---------------------------------------------------------------------------
+def _guard_sections(test: ast.expr, sections: Set[str]) -> Set[str]:
+    """Section names proven non-None by an ``if`` test of the literal
+    form ``self.<name> is not None`` (possibly ``and``-joined)."""
+    out: Set[str] = set()
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+        for v in test.values:
+            out |= _guard_sections(v, sections)
+        return out
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 and \
+            isinstance(test.ops[0], ast.IsNot) and \
+            isinstance(test.comparators[0], ast.Constant) and \
+            test.comparators[0].value is None and \
+            isinstance(test.left, ast.Attribute) and \
+            isinstance(test.left.value, ast.Name) and \
+            test.left.value.id == "self" and test.left.attr in sections:
+        out.add(test.left.attr)
+    return out
+
+
+def check_digest_fold(tree: ast.Module, path: str, cls_name: str,
+                      method: str, sections: Iterable[str]
+                      ) -> List[Finding]:
+    """Clause 2: every registered optional section folded exactly under
+    its own ``is not None`` guard inside ``cls_name.method``."""
+    findings: List[Finding] = []
+    wanted = set(sections)
+    cls = next((n for n in tree.body if isinstance(n, ast.ClassDef)
+                and n.name == cls_name), None)
+    if cls is None:
+        return [Finding("stale-registry", path, 1, cls_name,
+                        f"plan class {cls_name!r} no longer exists")]
+    fn = next((n for n in cls.body if isinstance(n, ast.FunctionDef)
+               and n.name == method), None)
+    if fn is None:
+        return [Finding("stale-registry", path, cls.lineno,
+                        f"{cls_name}.{method}",
+                        f"contract method {method!r} no longer exists")]
+    folded: Set[str] = set()
+
+    def visit(node: ast.AST, guarded: Set[str]) -> None:
+        if isinstance(node, ast.If):
+            extra = _guard_sections(node.test, wanted)
+            for child in node.body:
+                visit(child, guarded | extra)
+            for child in node.orelse:
+                visit(child, guarded)
+            return
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.slice, ast.Constant) and \
+                        t.slice.value in wanted:
+                    name = t.slice.value
+                    folded.add(name)
+                    if name not in guarded:
+                        findings.append(Finding(
+                            "digest-fold", path, node.lineno,
+                            f"{cls_name}.{method}:{name}",
+                            f"optional section {name!r} is folded into "
+                            f"the digest outside its `if self.{name} is "
+                            f"not None:` guard"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, guarded)
+
+    for stmt in fn.body:
+        visit(stmt, set())
+    for name in sorted(wanted - folded):
+        findings.append(Finding(
+            "digest-fold", path, fn.lineno,
+            f"{cls_name}.{method}:{name}",
+            f"registered optional section {name!r} is never folded into "
+            f"the contract dict"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# clause 3: struct pack/unpack twins
+# ---------------------------------------------------------------------------
+PACKERS = frozenset({"pack", "pack_into"})
+UNPACKERS = frozenset({"unpack", "unpack_from", "iter_unpack"})
+
+
+def _normalize_fmt(node: ast.expr) -> Optional[str]:
+    """A format-string expression as a comparable template: literals
+    verbatim, f-string interpolations as ``{}`` placeholders."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+            else:
+                parts.append("{}")
+        return "".join(parts)
+    return None
+
+
+def check_pack_unpack(tree: ast.Module, path: str) -> List[Finding]:
+    """Clause 3 over the wire codec module."""
+    findings: List[Finding] = []
+    # module-level Struct constants
+    struct_vars: Dict[str, Tuple[str, int]] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign) or \
+                not isinstance(node.value, ast.Call):
+            continue
+        f = node.value.func
+        is_struct = (isinstance(f, ast.Name) and f.id == "Struct") or \
+                    (isinstance(f, ast.Attribute) and f.attr == "Struct")
+        if not is_struct or not node.value.args:
+            continue
+        fmt = _normalize_fmt(node.value.args[0])
+        for t in node.targets:
+            if isinstance(t, ast.Name) and fmt is not None:
+                struct_vars[t.id] = (fmt, node.lineno)
+
+    var_packs: Set[str] = set()
+    var_unpacks: Set[str] = set()
+    inline_packs: List[Tuple[str, int]] = []
+    inline_unpacks: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or \
+                not isinstance(node.func, ast.Attribute):
+            continue
+        base, attr = node.func.value, node.func.attr
+        if isinstance(base, ast.Name) and base.id in struct_vars:
+            if attr in PACKERS:
+                var_packs.add(base.id)
+            elif attr in UNPACKERS:
+                var_unpacks.add(base.id)
+        elif isinstance(base, ast.Name) and base.id == "struct" and \
+                node.args:
+            fmt = _normalize_fmt(node.args[0])
+            if fmt is None:
+                continue
+            if attr in PACKERS:
+                inline_packs.append((fmt, node.lineno))
+            elif attr in UNPACKERS:
+                inline_unpacks.add(fmt)
+
+    # a Struct var's unpack also satisfies an identical inline pack
+    for name in var_unpacks:
+        inline_unpacks.add(struct_vars[name][0])
+
+    for name, (fmt, lineno) in sorted(struct_vars.items()):
+        if name in var_packs and name not in var_unpacks and \
+                fmt not in inline_unpacks:
+            findings.append(Finding(
+                "pack-unpack", path, lineno, name,
+                f"Struct {name} ({fmt!r}) is packed but never unpacked "
+                f"— the frame has no decoder twin"))
+        if "{" not in fmt:
+            try:
+                _struct.calcsize(fmt)
+            except _struct.error as e:
+                findings.append(Finding(
+                    "pack-unpack", path, lineno, name,
+                    f"Struct {name} format {fmt!r} is invalid: {e}"))
+
+    seen: Set[Tuple[str, int]] = set()
+    for fmt, lineno in inline_packs:
+        if (fmt, lineno) in seen:
+            continue
+        seen.add((fmt, lineno))
+        if fmt not in inline_unpacks:
+            findings.append(Finding(
+                "pack-unpack", path, lineno, fmt,
+                f"struct.pack format {fmt!r} has no byte-compatible "
+                f"struct.unpack twin in this module"))
+    return findings

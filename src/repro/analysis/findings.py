@@ -1,0 +1,61 @@
+"""The finding record every checker emits and the baseline matches on.
+
+A ``Finding`` is one violation of a machine-checked invariant: a shared
+attribute written outside its lock, a wall-clock call inside the virtual
+clock's domain, a plan-JSON key without a unit suffix. Findings are
+identified for suppression purposes by ``(rule, path, symbol)`` — the
+line number is carried for display but deliberately excluded from the
+identity, so routine edits above a justified finding do not invalidate
+its baseline entry.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Tuple
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One static-analysis violation.
+
+    ``rule`` names the checker clause (``lock-discipline``,
+    ``unguarded-shared-write``, ``registry-justification``,
+    ``stale-registry``, ``purity``, ``unit-suffix``, ``digest-fold``,
+    ``pack-unpack``, ``baseline-justification``, ``stale-suppression``);
+    ``path`` is the repo-relative posix path of the offending file;
+    ``symbol`` is the dotted lexical location (``Class.method``,
+    ``function``, or ``<module>``) plus, for contract rules, the key or
+    format string at issue.
+    """
+    rule: str
+    path: str
+    line: int
+    symbol: str
+    message: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """The identity the baseline suppresses on (no line number)."""
+        return (self.rule, self.path, self.symbol)
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain-dict form for the ``--json`` report."""
+        return asdict(self)
+
+    def render(self) -> str:
+        """One human-readable report line."""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.symbol} — " \
+               f"{self.message}"
+
+
+def repo_relative(path: str) -> str:
+    """Normalize ``path`` to a posix path relative to the repo root (the
+    directory holding ``src/``) when it lives under it, so findings and
+    baseline entries match regardless of how the CLI was invoked."""
+    apath = os.path.abspath(path)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    if apath.startswith(root + os.sep):
+        apath = apath[len(root) + 1:]
+    return apath.replace(os.sep, "/")

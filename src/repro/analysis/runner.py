@@ -1,0 +1,127 @@
+"""Dispatch: which checker runs where, and the aggregate report.
+
+The runner walks the given paths (files or directories), matches each
+``.py`` file against the registry's path suffixes, runs the applicable
+checkers, applies the baseline, and returns a ``Report``. This is the
+single entry point both the CLI (``python -m repro.analysis``) and the
+pytest gate (``tests/test_analysis.py``) call.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis import registry
+from repro.analysis.baseline import (BaselineEntry, apply_baseline,
+                                     load_baseline)
+from repro.analysis.concurrency import check_concurrency
+from repro.analysis.contracts import (check_digest_fold, check_pack_unpack,
+                                      check_unit_suffixes)
+from repro.analysis.findings import Finding, repo_relative
+from repro.analysis.purity import check_purity
+
+
+@dataclass
+class Report:
+    """Outcome of one analysis run."""
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    n_files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        """True when nothing unsuppressed remains — the gate is green."""
+        return not self.findings
+
+    def to_json(self) -> Dict[str, Any]:
+        """The ``--json`` report document."""
+        return {"ok": self.ok, "n_files": self.n_files,
+                "findings": [f.to_json() for f in self.findings],
+                "suppressed": [f.to_json() for f in self.suppressed]}
+
+    def render(self) -> str:
+        """Human-readable multi-line report."""
+        lines = [f.render() for f in self.findings]
+        lines.append(f"{len(self.findings)} finding(s) "
+                     f"({len(self.suppressed)} suppressed by baseline) "
+                     f"across {self.n_files} file(s)")
+        return "\n".join(lines)
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    """Every ``.py`` file under the given files/directories, sorted."""
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d != "__pycache__"]
+                out.extend(os.path.join(dirpath, f) for f in filenames
+                           if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def analyze_file(path: str) -> List[Finding]:
+    """All applicable checkers over one source file. Files the registry
+    does not scope (including the analysis package itself) yield no
+    findings — the gate is invariant-driven, not a general linter."""
+    rel = repo_relative(path)
+    with open(path) as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("parse-error", rel, e.lineno or 1, "<module>",
+                        f"file does not parse: {e.msg}")]
+    lines = source.splitlines()
+    findings: List[Finding] = []
+
+    for suffix, entries in registry.CONCURRENCY.items():
+        if rel.endswith(suffix):
+            findings.extend(check_concurrency(tree, rel, entries))
+
+    if registry.PURITY_TREE in rel:
+        findings.extend(check_purity(tree, rel, lines))
+    else:
+        for suffix, classes in registry.PURITY_SCOPES.items():
+            if rel.endswith(suffix):
+                findings.extend(check_purity(tree, rel, lines,
+                                             class_filter=classes))
+
+    for suffix, classes in registry.UNIT_SUFFIX_CLASSES.items():
+        if rel.endswith(suffix):
+            findings.extend(check_unit_suffixes(tree, rel, classes))
+    if rel.endswith(registry.PLAN_PATH):
+        findings.extend(check_digest_fold(
+            tree, rel, registry.PLAN_CLASS, registry.PLAN_METHOD,
+            registry.PLAN_SECTIONS))
+    if rel.endswith(registry.PROTOCOL_PATH):
+        findings.extend(check_pack_unpack(tree, rel))
+    return findings
+
+
+def run_analysis(paths: Sequence[str],
+                 baseline_path: Optional[str] = None,
+                 entries: Optional[Sequence[BaselineEntry]] = None
+                 ) -> Report:
+    """Analyze ``paths``, apply the baseline (a file path or pre-loaded
+    entries), return the report the CLI and the pytest gate consume."""
+    files = iter_python_files(paths)
+    findings: List[Finding] = []
+    for path in files:
+        findings.extend(analyze_file(path))
+    if entries is None:
+        entries = (load_baseline(baseline_path)
+                   if baseline_path and os.path.exists(baseline_path)
+                   else [])
+    unsuppressed, suppressed = apply_baseline(
+        findings, entries,
+        baseline_path=repo_relative(baseline_path)
+        if baseline_path else "analysis_baseline.json",
+        scanned_paths={repo_relative(p) for p in files})
+    return Report(findings=unsuppressed, suppressed=suppressed,
+                  n_files=len(files))

@@ -39,6 +39,7 @@ objective.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -101,6 +102,10 @@ class BandwidthEstimator:
     payload over ``t_tx`` wall-clock. The configured ``rtt_s`` is
     subtracted before dividing, since the per-send cost every channel
     charges is ``bytes/bandwidth + rtt``.
+
+    EWMA state is lock-guarded: the serving loop's observation path and
+    an outage report from a recovery thread may race (``serve_cloud``
+    handlers and ``EdgeClient`` worker threads both feed controllers).
     """
 
     def __init__(self, alpha: float = 0.4, min_samples: int = 2,
@@ -110,6 +115,7 @@ class BandwidthEstimator:
         self.rtt_s = rtt_s
         self.n_samples = 0
         self._ewma: Optional[float] = None
+        self._lock = threading.Lock()
 
     def observe(self, tx_bytes: float, t_tx: float) -> None:
         """Feed one uplink observation (payload bytes over send
@@ -117,9 +123,11 @@ class BandwidthEstimator:
         if tx_bytes <= 0 or t_tx <= 0:
             return                       # edge-only request: no uplink signal
         sample = tx_bytes / max(t_tx - self.rtt_s, 1e-9)
-        self._ewma = (sample if self._ewma is None else
-                      self.alpha * sample + (1 - self.alpha) * self._ewma)
-        self.n_samples += 1
+        with self._lock:
+            self._ewma = (sample if self._ewma is None else
+                          self.alpha * sample
+                          + (1 - self.alpha) * self._ewma)
+            self.n_samples += 1
 
     #: bytes/s an outage forces the estimate to — effectively "link dead"
     #: (≈1 kbit/s) without dividing by zero anywhere downstream.
@@ -131,8 +139,9 @@ class BandwidthEstimator:
         decision sees bandwidth→0 instead of the stale pre-outage EWMA.
         Subsequent healthy observations pull the EWMA back up at the
         usual ``alpha`` rate — that is the heal-back path."""
-        self._ewma = self.OUTAGE_BANDWIDTH
-        self.n_samples = max(self.n_samples, self.min_samples)
+        with self._lock:
+            self._ewma = self.OUTAGE_BANDWIDTH
+            self.n_samples = max(self.n_samples, self.min_samples)
 
     @property
     def ready(self) -> bool:
@@ -181,6 +190,10 @@ class AdaptiveSplitController:
     than the hysteresis margin (and the dwell period has passed), else
     ``None``. The caller executes the switch (``CollabRunner.set_split``
     / ``EdgeClient.resplit``) — the controller only decides.
+
+    Decision state (``split``, ``battery_j``, request/dwell counters) is
+    lock-guarded: the request path and an outage report from a recovery
+    thread may mutate it concurrently.
     """
 
     def __init__(self, costs, profile: TwoTierProfile, input_bytes: float,
@@ -205,6 +218,7 @@ class AdaptiveSplitController:
         self.n_requests = 0
         self._since_switch = 0
         self.history: List[SplitSwitch] = []
+        self._lock = threading.Lock()
 
     @classmethod
     def for_deployment(cls, cfg: CNNConfig, policy: AdaptivePolicy,
@@ -256,8 +270,11 @@ class AdaptiveSplitController:
     def drain(self, e_edge_j: Optional[float]) -> None:
         """Subtract one request's measured edge energy from the battery
         budget (no-op when unmetered or the request reported no energy)."""
-        if self.battery_j is not None and e_edge_j is not None:
-            self.battery_j = max(self.battery_j - e_edge_j, 0.0)
+        if e_edge_j is None:
+            return
+        with self._lock:
+            if self.battery_j is not None:
+                self.battery_j = max(self.battery_j - e_edge_j, 0.0)
 
     def observe(self, tx_bytes: float, t_tx: float,
                 e_edge_j: Optional[float] = None) -> None:
@@ -266,8 +283,9 @@ class AdaptiveSplitController:
         budget, and the dwell counter."""
         self.estimator.observe(tx_bytes, t_tx)
         self.drain(e_edge_j)
-        self.n_requests += 1
-        self._since_switch += 1
+        with self._lock:
+            self.n_requests += 1
+            self._since_switch += 1
 
     def note_outage(self) -> Optional[SplitSwitch]:
         """React to a cloud outage (a request that fell back to
@@ -280,15 +298,17 @@ class AdaptiveSplitController:
         uplink observations pull the EWMA back up and ``step`` re-splits
         toward offloading through the normal hysteresis/dwell guards."""
         self.estimator.note_outage()
-        self._since_switch = self.policy.dwell
+        with self._lock:
+            self._since_switch = self.policy.dwell
         return self.maybe_switch()
 
     def note_external_switch(self, split: int) -> None:
         """Adopt a split executed outside the controller (a manual
         ``resplit``) and restart the dwell window, so the controller does
         not immediately overrule the override on the next request."""
-        self.split = split
-        self._since_switch = 0
+        with self._lock:
+            self.split = split
+            self._since_switch = 0
 
     def sweep(self, bandwidth: float) -> List[Dict[str, float]]:
         """The Eq. 5 greedy sweep over the candidates at ``bandwidth``,
@@ -333,9 +353,10 @@ class AdaptiveSplitController:
                          current_E=cur.get("E_edge"),
                          predicted_E=best.get("E_edge"),
                          battery_j=self.battery_j)
-        self.split = sw.new_split
-        self._since_switch = 0
-        self.history.append(sw)
+        with self._lock:
+            self.split = sw.new_split
+            self._since_switch = 0
+            self.history.append(sw)
         return sw
 
     def step(self, tx_bytes: float, t_tx: float,

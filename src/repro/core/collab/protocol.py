@@ -274,7 +274,9 @@ def hello_caps(buf: bytes) -> int:
     if magic != HELLO_MAGIC:
         raise ValueError("bad HELLO-frame magic")
     off = _HELLO.size + dlen
-    return buf[off] if len(buf) > off else 0
+    if len(buf) <= off:
+        return 0
+    return struct.unpack_from("<B", buf, off)[0]
 
 
 def is_hello(buf: bytes) -> bool:
@@ -353,6 +355,16 @@ def is_heartbeat(buf: bytes) -> bool:
     """True when the frame's leading magic marks a heartbeat keepalive."""
     return (len(buf) >= 4
             and struct.unpack_from("<I", buf, 0)[0] == HEARTBEAT_MAGIC)
+
+
+def decode_heartbeat(buf: bytes) -> int:
+    """Decode a heartbeat keepalive -> the sender's protocol version
+    (the pack twin of ``encode_heartbeat``; raises on a non-heartbeat
+    frame)."""
+    magic, version = _HEARTBEAT.unpack_from(buf, 0)
+    if magic != HEARTBEAT_MAGIC:
+        raise ValueError("bad heartbeat-frame magic")
+    return version
 
 
 def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:

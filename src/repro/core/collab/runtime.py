@@ -85,7 +85,8 @@ from repro.core.collab.protocol import (CAP_CRC, CODEC_TX_SCALE,
                                         PROTOCOL_VERSION,
                                         FrameIntegrityError,
                                         PlanMismatchError, decode_any,
-                                        decode_hello, decode_resplit,
+                                        decode_heartbeat, decode_hello,
+                                        decode_resplit,
                                         decode_sealed, decode_tensor,
                                         encode_feature, encode_heartbeat,
                                         encode_hello, encode_resplit,
@@ -161,6 +162,9 @@ class SplitFnBank:
         self.n_layers = len(self.deploy_cfg.layers)
         self._fns: Dict[int, Tuple] = {}
         self._batched_fns: Dict[int, Tuple] = {}
+        # serve_cloud handler threads share one bank: first-touch builds
+        # of a (split, bucket) pair must not race the dict insert
+        self._cache_lock = threading.Lock()
         #: traced-body counter — bumps once every time XLA (re)traces any
         #: sub-model function of this bank (a new split, a new batch
         #: bucket shape). ``warm`` followed by a steady count is the
@@ -230,14 +234,16 @@ class SplitFnBank:
         if not 0 <= split <= self.n_layers:
             raise ValueError(f"split {split} outside [0, {self.n_layers}]")
         if batch_bucket is None:
-            if split not in self._fns:
-                self._fns[split] = self._build(split)
-            return self._fns[split]
+            with self._cache_lock:
+                if split not in self._fns:
+                    self._fns[split] = self._build(split)
+                return self._fns[split]
         if batch_bucket < 1:
             raise ValueError(f"batch_bucket must be >= 1, got {batch_bucket}")
-        if split not in self._batched_fns:
-            self._batched_fns[split] = self._build_batched(split)
-        return self._batched_fns[split]
+        with self._cache_lock:
+            if split not in self._batched_fns:
+                self._batched_fns[split] = self._build_batched(split)
+            return self._batched_fns[split]
 
     def warm(self, splits: Sequence[int], image: np.ndarray,
              edge_only: bool = False, buckets: Sequence[int] = (1,),
@@ -738,7 +744,10 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 (n,) = struct.unpack("<Q", rx(8))
                 buf = rx(n)
                 if is_heartbeat(buf):
-                    _count("heartbeats")    # keepalive only: not a request
+                    # keepalive only, not a request; decode validates
+                    # magic+version so a truncated frame counts as bad
+                    decode_heartbeat(buf)
+                    _count("heartbeats")
                     continue
                 seq: Optional[int] = None
                 if is_sealed(buf):

@@ -27,7 +27,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_PAGES = ["docs/architecture.md", "docs/wire-protocol.md",
              "docs/deployment-plan.md", "docs/benchmarks.md",
-             "docs/fleet-sim.md"]
+             "docs/fleet-sim.md", "docs/static-analysis.md"]
 #: generated artifacts (gitignored): referenced by the docs but not
 #: present in a fresh checkout
 GENERATED_PREFIXES = ("experiments/",)
@@ -153,6 +153,15 @@ def test_doc_cli_commands_reference_real_flags(page):
         mod, script, rest = m.groups()
         rel = script if script else mod.replace(".", "/") + ".py"
         path = os.path.join(REPO, rel)
+        if not script and not os.path.exists(path):
+            # ``python -m pkg`` may name a package: try its __main__.py
+            # (both at the repo root and under src/)
+            for cand in (mod.replace(".", "/") + "/__main__.py",
+                         "src/" + mod.replace(".", "/") + ".py",
+                         "src/" + mod.replace(".", "/") + "/__main__.py"):
+                if os.path.exists(os.path.join(REPO, cand)):
+                    rel, path = cand, os.path.join(REPO, cand)
+                    break
         if not os.path.exists(path):
             if script or mod.split(".")[0] in ("benchmarks", "examples",
                                                "repro"):
