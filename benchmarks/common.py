@@ -5,8 +5,8 @@ writes is ``BENCH_<name>.json`` — ``save_result`` enforces the prefix,
 so a raw per-benchmark dump (``BENCH_cloud_batching.json``) and the
 distilled tracked records the ``write_*_record`` helpers own
 (``BENCH_collab.json`` / ``BENCH_energy.json`` / ``BENCH_faults.json``
-/ ``BENCH_fleet.json``) follow one convention instead of the historical
-mix of bare and prefixed names. The distilled records are the ones
+/ ``BENCH_fleet.json`` / ``BENCH_failover.json``) follow one convention
+instead of the historical mix of bare and prefixed names. The distilled records are the ones
 ROADMAP.md / docs/benchmarks.md reference, git tracks, and CI uploads.
 """
 from __future__ import annotations
@@ -116,6 +116,33 @@ def write_faults_record(fault_injection: Dict) -> str:
     rec["cloud_death_recovery_s"] = (
         fault_injection["cloud_death"]["recovery_s"])
     return save_result("BENCH_faults", rec)
+
+
+def write_failover_record(failover: Dict) -> str:
+    """The tracked high-availability record, ``BENCH_failover.json``:
+    one flat summary of the fleet drills — the kill drill's availability,
+    reroute recovery time and request percentiles under a member death,
+    and the rolling-drain drill's zero-failed-requests contract — plus
+    the fleet-wide reroute/migration counts. Written by
+    ``benchmarks.failover`` run with ``--json``/``--smoke`` (the CI
+    path); CI uploads it next to the other BENCH records."""
+    kill, drain = failover["kill_drill"], failover["drain_drill"]
+    rec = {
+        "n_edges": failover["n_edges"],
+        "n_servers": failover["n_servers"],
+        "bit_identical": failover["bit_identical"],
+        "kill_availability": kill["availability"],
+        "kill_recovery_max_s": kill["recovery_max_s"],
+        "kill_p50_ms": kill["p50_ms"],
+        "kill_p99_ms": kill["p99_ms"],
+        "kill_faults": kill["faults"],
+        "kill_reroutes": kill["reroutes"],
+        "drain_availability": drain["availability"],
+        "drain_faults": drain["faults"],
+        "drain_migrations": drain["migrations"],
+        "drain_p99_ms": drain["p99_ms"],
+    }
+    return save_result("BENCH_failover", rec)
 
 
 def write_fleet_record(fleet_sim: Dict) -> str:

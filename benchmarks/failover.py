@@ -1,0 +1,263 @@
+"""High-availability fleet drills: server death and rolling restart
+under multi-edge load (BENCH).
+
+A single cloud process is a single point of failure: one restart drops
+every connected edge. The fleet front tier (``RoutingPolicy`` +
+``FleetRouter`` + ``CloudFleet``) spreads edges across N servers and
+keeps collaborative serving available through member loss and rolling
+restarts. This benchmark measures exactly that contract with a real
+3-server fleet and 8 fleet-routed edge sessions:
+
+  1. **Kill drill** — mid-load, the member every edge's lane hashes to
+     is crashed (hard connection resets, no goodbye). Each edge detects
+     the death, marks the member dead, reroutes to the next healthy
+     server, and replays its in-flight request — logits bit-identical
+     to the fault-free reference. Reported: availability (acceptance:
+     >= 99%), the worst per-edge reroute recovery time (the wall-clock
+     of the faulted request, detection + reroute + replay — acceptance:
+     < 250 ms), and p50/p99 request latency across the whole drill.
+  2. **Rolling-drain drill** — every member is restarted in sequence:
+     DRAIN announcements migrate the edges (no fault budget spent), the
+     member restarts, the routers revive it, and the next member drains.
+     Acceptance: availability 100%, zero faults — a full fleet rollout
+     with zero failed requests.
+
+``--smoke`` runs the CI-sized version; the tracked perf record
+``experiments/bench/BENCH_failover.json`` is written by ``--json`` (or
+the smoke path), next to ``BENCH_faults.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_result, table, write_failover_record
+from repro import serving
+from repro.core.partition.profiles import PAPER_PROFILE
+from repro.core.pruning.masks import cnn_masks_from_ratios
+from repro.models.cnn import init_cnn_params, prunable_layers, tiny_cnn_config
+
+BASE_PORT = 29960
+SPLIT = 6
+N_EDGES = 8
+N_SERVERS = 3
+#: untimed warm-up requests per session (jit compile on both peers)
+N_WARMUP = 2
+
+#: bench-scaled recovery contract: ms-range backoff, deadline sliced
+#: across 1+3 attempts, deterministic jitter, edge fallback as the
+#: bottom rung (the drills must never reach it while a member survives)
+POLICY = serving.FaultPolicy(max_retries=3, backoff_base_s=0.01,
+                             backoff_max_s=0.05, backoff_jitter=0.0,
+                             request_deadline_s=0.8, fallback="edge",
+                             seed=0)
+
+
+def _setup() -> serving.DeploymentPlan:
+    ports = tuple(BASE_PORT + k for k in range(N_SERVERS))
+    cfg = tiny_cnn_config(num_classes=38, hw=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    masks = cnn_masks_from_ratios(params, cfg,
+                                  {i: 0.5 for i in prunable_layers(cfg)})
+    return serving.DeploymentPlan.from_args(
+        params, cfg, SPLIT, masks=masks, compact=True, codec="fp32",
+        profile=PAPER_PROFILE, shape_link=False, faults=POLICY,
+        port=ports[0],
+        routing=serving.RoutingPolicy(ports=ports, dead_after_count=1))
+
+
+def _images(n: int) -> List[np.ndarray]:
+    rng = np.random.RandomState(0)
+    return [rng.rand(1, 32, 32, 3).astype(np.float32) for _ in range(n)]
+
+
+def _reference(plan, imgs) -> List[np.ndarray]:
+    """Fault-free logits per image from the local backend — the bit
+    budget every rerouted/replayed socket answer must still hit."""
+    sess = serving.connect(plan, backend="local")
+    try:
+        return [sess.infer(img)["logits"] for img in imgs]
+    finally:
+        sess.close()
+
+
+def _sessions(plan) -> List:
+    out = [serving.connect(plan, backend="socket") for _ in range(N_EDGES)]
+    for s in out:
+        for _ in range(N_WARMUP):
+            s.infer(_images(1)[0])
+    return out
+
+
+def _sweep(sessions, imgs, ref, counters: Dict,
+           lats: List[float]) -> None:
+    """One full round: every edge serves every image, faithfully
+    accounted (latency, fault budget, bit-identity)."""
+    for i, img in enumerate(imgs):
+        for sess in sessions:
+            t0 = time.perf_counter()
+            try:
+                res = sess.infer(img)
+            except Exception:               # noqa: BLE001 — counted
+                continue                    # as unavailability
+            lats.append(time.perf_counter() - t0)
+            counters["served"] += 1
+            rec = res["fault"]
+            counters["faults"] += rec["faults"]
+            counters["retries"] += rec["retries"]
+            counters["migrations"] += rec["migrations"]
+            counters["fallbacks"] += int(rec["fallback"])
+            counters["mismatches"] += int(
+                not np.array_equal(res["logits"], ref[i]))
+
+
+def _counters() -> Dict:
+    return {"served": 0, "faults": 0, "retries": 0, "migrations": 0,
+            "fallbacks": 0, "mismatches": 0}
+
+
+def _row(name: str, n: int, c: Dict, lats: List[float]) -> Dict:
+    return {
+        "scenario": name, "requests": n, "served": c["served"],
+        "availability": c["served"] / n,
+        "faults": c["faults"], "retries": c["retries"],
+        "migrations": c["migrations"], "fallbacks": c["fallbacks"],
+        "mismatches": c["mismatches"],
+        "p50_ms": float(np.percentile(lats, 50)) * 1e3 if lats else None,
+        "p99_ms": float(np.percentile(lats, 99)) * 1e3 if lats else None,
+    }
+
+
+def kill_drill(plan, imgs, ref) -> Dict:
+    """Crash the member every lane hashes to, mid-load: the edges mark
+    it dead, reroute, and replay — ``recovery_max_s`` is the worst
+    per-edge wall-clock of the faulted request."""
+    c, lats = _counters(), []
+    with serving.CloudFleet(plan) as fleet:
+        sessions = _sessions(plan)
+        try:
+            _sweep(sessions, imgs, ref, c, lats)
+            victim = sessions[0]._client._port
+            fleet.kill(victim)
+            # the rerouted replay: every edge's next request eats the
+            # death, reroutes, and must still answer bit-identically
+            recoveries = []
+            for sess in sessions:
+                t0 = time.perf_counter()
+                res = sess.infer(imgs[0])
+                recoveries.append(time.perf_counter() - t0)
+                lats.append(recoveries[-1])
+                c["served"] += 1
+                c["faults"] += res["fault"]["faults"]
+                c["retries"] += res["fault"]["retries"]
+                c["migrations"] += res["fault"]["migrations"]
+                c["fallbacks"] += int(res["fault"]["fallback"])
+                c["mismatches"] += int(
+                    not np.array_equal(res["logits"], ref[0]))
+            _sweep(sessions, imgs, ref, c, lats)
+            reroutes = sum(s.router.stats()["reroutes_count"]
+                           for s in sessions)
+            dead = {p: sessions[0].router.state(p)
+                    for p in plan.routing.ports}
+        finally:
+            for s in sessions:
+                s.close()
+    n = 2 * len(imgs) * N_EDGES + N_EDGES
+    row = _row("kill_member", n, c, lats)
+    row["victim"] = victim
+    row["reroutes"] = reroutes
+    row["recovery_max_s"] = max(recoveries)
+    row["states_after"] = dead
+    return row
+
+
+def drain_drill(plan, imgs, ref) -> Dict:
+    """Roll the whole fleet, one member at a time: drain -> the edges
+    migrate on DRAIN replies (zero fault budget) -> restart -> revive.
+    A full rollout must lose nothing: availability 1.0, faults 0."""
+    c, lats = _counters(), []
+    rounds = 0
+    with serving.CloudFleet(plan) as fleet:
+        sessions = _sessions(plan)
+        try:
+            for _ in range(N_SERVERS):
+                victim = sessions[0]._client._port
+                fleet.drain(victim)
+                _sweep(sessions, imgs, ref, c, lats)
+                fleet.restart(victim)
+                for s in sessions:
+                    s.router.revive(victim)
+                rounds += 1
+        finally:
+            for s in sessions:
+                s.close()
+    n = rounds * len(imgs) * N_EDGES
+    return _row("rolling_drain", n, c, lats)
+
+
+def run(fast: bool = False) -> dict:
+    plan = _setup()
+    n = 3 if fast else 8
+    imgs = _images(n)
+    ref = _reference(plan, imgs)
+    print(plan.describe())
+
+    kill = kill_drill(plan, imgs, ref)
+    drain = drain_drill(plan, imgs, ref)
+    rows = [kill, drain]
+
+    print(table(rows, ["scenario", "requests", "served", "availability",
+                       "faults", "migrations", "fallbacks", "p50_ms",
+                       "p99_ms"],
+                f"{N_SERVERS}-server fleet, {N_EDGES} edges, "
+                f"split c={SPLIT}, retries<={POLICY.max_retries}, "
+                f"deadline {POLICY.request_deadline_s}s"))
+    print(f"   kill: member {kill['victim']} died under load — worst "
+          f"reroute recovery {kill['recovery_max_s'] * 1e3:.0f} ms, "
+          f"{kill['reroutes']} reroutes")
+    print(f"   drain: full {N_SERVERS}-member rollout, "
+          f"{drain['migrations']} migrations, {drain['faults']} faults")
+
+    assert kill["availability"] >= 0.99, (
+        f"kill drill availability {kill['availability']:.3f} < 0.99", kill)
+    assert kill["recovery_max_s"] < 0.25, (
+        f"reroute recovery {kill['recovery_max_s'] * 1e3:.0f} ms "
+        f">= 250 ms", kill)
+    assert kill["fallbacks"] == 0, (
+        "an edge fell back to local serving while healthy members "
+        "remained", kill)
+    assert drain["availability"] == 1.0 and drain["faults"] == 0, (
+        "a rolling drain failed requests — the zero-loss rollout "
+        "contract is broken", drain)
+    assert drain["migrations"] >= N_EDGES, (
+        "the drain never actually migrated the edges", drain)
+    bit_identical = all(r["mismatches"] == 0 for r in rows)
+    assert bit_identical, ("served logits diverged from the fault-free "
+                           "reference", rows)
+
+    out = {"n_edges": N_EDGES, "n_servers": N_SERVERS, "split": SPLIT,
+           "policy": POLICY.to_json(),
+           "routing": plan.routing.to_json(),
+           "kill_drill": kill, "drain_drill": drain,
+           "bit_identical": bit_identical}
+    # raw per-drill dump; the distilled tracked record is
+    # BENCH_failover.json (write_failover_record)
+    save_result("failover_drills", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests per drill)")
+    ap.add_argument("--json", action="store_true",
+                    help="write the tracked BENCH_failover.json record")
+    args = ap.parse_args()
+    res = run(fast=args.smoke)
+    if args.json or args.smoke:
+        # the CI smoke path owns the tracked record, like fault_injection
+        print(f"perf record: {write_failover_record(res)}")

@@ -126,6 +126,16 @@ CONCURRENCY: Dict[str, Tuple] = {
                    note="single-stage-thread owner (see busy_s)"),
     ),
     "core/collab/faults.py": (),     # pure-data policies: no shared state
+    "core/collab/cluster.py": (
+        SharedAttr("FleetRouter", "_state", lock="_lock"),
+        SharedAttr("FleetRouter", "_miss", lock="_lock"),
+        SharedAttr("FleetRouter", "_dead_at_s", lock="_lock"),
+        SharedAttr("FleetRouter", "_routed", lock="_lock"),
+        SharedAttr("FleetRouter", "_reroutes", lock="_lock"),
+    ),
+    "serving/session.py": (
+        SharedAttr("CloudFleet", "_servers", lock="_lock"),
+    ),
 }
 
 #: path suffix -> class names to scan (None = whole file). Everything
@@ -146,9 +156,10 @@ UNIT_SUFFIX_CLASSES: Dict[str, Tuple[str, ...]] = {
     "core/collab/batching.py": ("BatchingPolicy", "LaneStats"),
     "core/collab/faults.py": ("FaultPolicy",),
     "core/collab/adaptive.py": ("AdaptivePolicy",),
+    "core/collab/cluster.py": ("RoutingPolicy",),
     "core/partition/energy_model.py": ("EnergyPolicy", "EnergyProfile"),
     "core/fleet/scenario.py": ("FleetScenario", "SLOClass",
-                               "ArrivalPattern"),
+                               "ArrivalPattern", "ChaosEvent"),
 }
 
 #: the DeploymentPlan optional sections under the fold-only-when-set rule
@@ -156,7 +167,7 @@ PLAN_PATH = "serving/plan.py"
 PLAN_CLASS = "DeploymentPlan"
 PLAN_METHOD = "contract"
 PLAN_SECTIONS: Tuple[str, ...] = ("adaptive", "batching", "energy",
-                                  "faults", "fleet")
+                                  "faults", "fleet", "routing")
 
 #: the wire codec whose pack formats need unpack twins
 PROTOCOL_PATH = "core/collab/protocol.py"

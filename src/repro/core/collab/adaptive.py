@@ -302,6 +302,18 @@ class AdaptiveSplitController:
             self._since_switch = self.policy.dwell
         return self.maybe_switch()
 
+    def note_congestion(self) -> Optional[SplitSwitch]:
+        """React to fleet backpressure (a request that had to migrate
+        after a BUSY shed): waive the dwell guard and re-decide at the
+        *current* bandwidth estimate. Unlike ``note_outage`` this does
+        not collapse the estimator — the link is healthy, the cloud
+        tier is the bottleneck — it just lets the controller answer the
+        congestion signal immediately instead of waiting out the dwell
+        window."""
+        with self._lock:
+            self._since_switch = self.policy.dwell
+        return self.maybe_switch()
+
     def note_external_switch(self, split: int) -> None:
         """Adopt a split executed outside the controller (a manual
         ``resplit``) and restart the dwell window, so the controller does

@@ -94,6 +94,14 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
                      f"{buckets[-1]}")
 
 
+class LaneSaturated(RuntimeError):
+    """A bounded lane queue is full: admitting this frame would stall
+    the connection behind an overloaded server. ``serve_cloud`` answers
+    the edge with a BUSY backpressure frame (shed reason ``"queue"``,
+    mirroring the fleet simulator's admission semantics) so a
+    fleet-routed edge redirects to another member instead of waiting."""
+
+
 @dataclass(frozen=True)
 class BatchingPolicy:
     """Serializable dynamic-batching knobs (the plan's ``batching``
@@ -104,17 +112,25 @@ class BatchingPolicy:
     the first request of a batch while topping it up (the latency price
     of throughput; 0 still fuses whatever is already queued);
     ``buckets`` are the padded compilation shapes (empty = powers of two
-    up to ``max_batch``).
+    up to ``max_batch``). ``max_queue`` bounds each lane's queue depth
+    in frames: ``None`` (the default, and the historical behaviour)
+    queues without bound, a positive bound makes ``submit`` raise
+    ``LaneSaturated`` instead of stalling — the overload-backpressure
+    contract behind the BUSY wire frame. Serialized only when set, so
+    unbounded plans keep their digests.
     """
     max_batch: int = 8
     max_wait_ms: float = 3.0
     buckets: Tuple[int, ...] = ()
+    max_queue: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None = unbounded)")
         if self.buckets:
             bs = tuple(int(b) for b in self.buckets)
             if sorted(set(bs)) != list(bs):
@@ -132,16 +148,23 @@ class BatchingPolicy:
         return self.buckets or default_buckets(self.max_batch)
 
     def to_json(self) -> Dict[str, Any]:
-        """Serialize for ``plan.json`` (the digest-folded form)."""
-        return {"max_batch": self.max_batch,
-                "max_wait_ms": self.max_wait_ms,
-                "buckets": [int(b) for b in self.buckets]}
+        """Serialize for ``plan.json`` (the digest-folded form); the
+        lane bound is emitted only when set, so unbounded (historical)
+        plans keep their digests byte-for-byte."""
+        d = {"max_batch": self.max_batch,
+             "max_wait_ms": self.max_wait_ms,
+             "buckets": [int(b) for b in self.buckets]}
+        if self.max_queue is not None:
+            d["max_queue"] = self.max_queue
+        return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "BatchingPolicy":
+        mq = d.get("max_queue")
         return cls(max_batch=int(d["max_batch"]),
                    max_wait_ms=float(d["max_wait_ms"]),
-                   buckets=tuple(int(b) for b in d.get("buckets", ())))
+                   buckets=tuple(int(b) for b in d.get("buckets", ())),
+                   max_queue=int(mq) if mq is not None else None)
 
 
 @dataclass
@@ -229,7 +252,11 @@ class DynamicBatcher:
     # -- client side --------------------------------------------------------
     def submit(self, split: int, lane: str, x: np.ndarray) -> Future:
         """Queue a decoded feature tensor (rows of one frame) for the
-        cloud sub-model at ``split``; returns a Future of its logits."""
+        cloud sub-model at ``split``; returns a Future of its logits.
+        With a bounded lane (``policy.max_queue``), raises
+        ``LaneSaturated`` instead of queueing when the lane is already
+        ``max_queue`` frames deep — the caller sheds with backpressure
+        (the BUSY wire frame) rather than stalling the connection."""
         if self._stop.is_set():
             raise RuntimeError("batcher is stopped")
         x = np.asarray(x)
@@ -247,6 +274,11 @@ class DynamicBatcher:
                     name=f"batcher-{key}")
                 self._lanes[key] = ln
                 ln.thread.start()
+        if (self.policy.max_queue is not None
+                and ln.q.qsize() + (1 if ln.carry is not None else 0)
+                >= self.policy.max_queue):
+            raise LaneSaturated(
+                f"lane {key} is {self.policy.max_queue} frames deep")
         fut: Future = Future()
         ln.q.put((x, rows, fut))
         return fut

@@ -15,16 +15,24 @@ recovery half of the fault story (the injection half lives in
   digests byte-for-byte.
 - ``RequestTimeout`` — the typed error replacing the historical
   hang-forever read on a dead cloud.
+- ``ServerDraining`` / ``ServerBusy`` — typed signals decoded from the
+  DRAIN and BUSY control frames: the server is not *failing*, it is
+  restarting (drain-migrate) or shedding load (redirect), and a
+  fleet-routed edge moves the request to another member instead of
+  burning its fault budget.
 - ``fault_record`` — the uniform per-request ``{faults, retries,
-  fallback}`` accounting every backend (local, socket, streaming)
-  attaches to its results.
+  migrations, fallback}`` accounting every backend (local, socket,
+  streaming) attaches to its results.
 
 The degradation ladder a policy drives, top to bottom: CRC catches the
 corruption -> the deadline catches the hang -> retries with backoff ride
 out transients (reconnect, re-HELLO, re-RESPLIT, replay by sequence
-number) -> edge-only fallback serves the request from the ``SplitFnBank``
-c=N pair, bit-identical to an all-edge split -> the adaptive controller
-treats the outage as bandwidth→0 and re-splits back once the link heals.
+number) -> a fleet-routed edge reroutes to the next healthy server
+(DRAIN/BUSY migrate without spending faults) -> edge-only fallback
+serves the request from the ``SplitFnBank`` c=N pair, bit-identical to
+an all-edge split, only once the whole fleet is gone -> the adaptive
+controller treats the outage as bandwidth→0 and re-splits back once the
+link heals.
 """
 from __future__ import annotations
 
@@ -44,14 +52,37 @@ class RequestTimeout(TimeoutError):
     handling still catches it."""
 
 
+class ServerDraining(ConnectionError):
+    """The cloud answered a request with a DRAIN control frame: it is
+    flushing for a rolling restart and admits nothing new. Not a fault —
+    a fleet-routed edge migrates to the next healthy member and replays
+    the request there (zero failed requests across a rolling drain)."""
+
+
+class ServerBusy(ConnectionError):
+    """The cloud answered a request with a BUSY backpressure frame: the
+    bounded batching lane is saturated (shed reason mirrors the fleet
+    simulator's admission vocabulary). With ``redirect`` set, a
+    fleet-routed edge replays the request on another member immediately
+    instead of queueing behind the overload."""
+
+    def __init__(self, reason: str = "queue", redirect: bool = True):
+        super().__init__(f"server shed request (reason={reason!r}, "
+                         f"redirect={redirect})")
+        self.reason = reason
+        self.redirect = redirect
+
+
 def fault_record(faults: int = 0, retries: int = 0,
-                 fallback: bool = False) -> Dict[str, object]:
+                 fallback: bool = False,
+                 migrations: int = 0) -> Dict[str, object]:
     """The uniform per-request fault accounting record all backends
     report: ``faults`` = failures observed serving this request,
-    ``retries`` = recovery attempts spent, ``fallback`` = True when the
+    ``retries`` = recovery attempts spent, ``migrations`` = DRAIN/BUSY
+    reroutes to another fleet member, ``fallback`` = True when the
     request was served edge-only after exhausting the retry budget."""
     return {"faults": int(faults), "retries": int(retries),
-            "fallback": bool(fallback)}
+            "migrations": int(migrations), "fallback": bool(fallback)}
 
 
 @dataclass(frozen=True)

@@ -67,6 +67,25 @@ cloud (no reply); a cloud serving a plan with a ``FaultPolicy`` whose
 ``heartbeat_s`` is set reaps clients idle for several intervals:
     magic   u32  = 0x42545248 ("HRTB")
     version u16  (protocol version)
+
+DRAIN frame (``encode_drain``) — cloud-to-edge announcement that the
+server is draining for a rolling restart: it stops admitting new
+requests, flushes its batching lanes, and expects connected edges to
+migrate to another fleet member mid-session (zero failed requests).
+Versioned like HELLO:
+    magic   u32  = 0x4E415244 ("DRAN")
+    version u16  (protocol version)
+    reason  u8   (0 = restart; reserved for future drain causes)
+
+BUSY frame (``encode_busy``) — cloud-to-edge overload backpressure
+reply sent instead of queueing a request on a saturated (bounded)
+batching lane. Carries a shed-reason code mirroring the fleet
+simulator's admission vocabulary and a redirect hint telling a
+fleet-routed edge to retry the request on another healthy server:
+    magic    u32  = 0x59535542 ("BUSY")
+    version  u16  (protocol version)
+    reason   u8   (shed reason code, 0 = "queue")
+    redirect u8   (1 => retry on another fleet server)
 """
 from __future__ import annotations
 
@@ -82,6 +101,8 @@ HELLO_MAGIC = 0x4F4C4548
 RESPLIT_MAGIC = 0x4C505352
 SEALED_MAGIC = 0x46514553
 HEARTBEAT_MAGIC = 0x42545248
+DRAIN_MAGIC = 0x4E415244
+BUSY_MAGIC = 0x59535542
 PROTOCOL_VERSION = 1
 #: HELLO capability bit: peer understands sealed (CRC32 + seq) frames
 CAP_CRC = 1
@@ -91,6 +112,14 @@ _HELLO = struct.Struct("<IHBB")
 _RESPLIT = struct.Struct("<IHBH")
 _SEALED = struct.Struct("<III")
 _HEARTBEAT = struct.Struct("<IH")
+_DRAIN = struct.Struct("<IHB")
+_BUSY = struct.Struct("<IHBB")
+
+#: BUSY shed-reason codes — the wire mirror of the fleet simulator's
+#: admission vocabulary (``RequestRecord.shed_reason``); today only the
+#: bounded-lane overflow reason exists on the socket path
+BUSY_REASONS = {"queue": 0}
+BUSY_REASON_NAMES = {v: k for k, v in BUSY_REASONS.items()}
 
 
 class PlanMismatchError(ConnectionError):
@@ -365,6 +394,69 @@ def decode_heartbeat(buf: bytes) -> int:
     if magic != HEARTBEAT_MAGIC:
         raise ValueError("bad heartbeat-frame magic")
     return version
+
+
+# ---------------------------------------------------------------------------
+# DRAIN / BUSY control frames (fleet drain-migration and backpressure)
+# ---------------------------------------------------------------------------
+def encode_drain(reason: int = 0,
+                 version: int = PROTOCOL_VERSION) -> bytes:
+    """Control frame announcing the server is draining (rolling restart):
+    it admits no new requests, flushes its lanes, and connected edges
+    should migrate to another healthy fleet server mid-session."""
+    if not 0 <= reason <= 0xFF:
+        raise ValueError("drain reason must fit one byte")
+    return _DRAIN.pack(DRAIN_MAGIC, version, reason)
+
+
+def decode_drain(buf: bytes) -> Tuple[int, int]:
+    """Decode a DRAIN frame -> (reason, version). A frame that is too
+    short or carries the wrong magic raises ``ValueError`` (the bad-frame
+    vocabulary every peer already classifies), never ``struct.error``."""
+    if len(buf) < _DRAIN.size or not is_drain(buf):
+        raise ValueError("bad DRAIN-frame magic")
+    _, version, reason = _DRAIN.unpack_from(buf, 0)
+    return reason, version
+
+
+def is_drain(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a DRAIN control frame."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == DRAIN_MAGIC)
+
+
+def encode_busy(reason: str = "queue", redirect: bool = True,
+                version: int = PROTOCOL_VERSION) -> bytes:
+    """Overload-backpressure reply sent instead of queueing a request on
+    a saturated bounded lane. ``reason`` is a fleet-simulator shed
+    reason (``BUSY_REASONS``); ``redirect`` hints that a fleet-routed
+    edge should replay the request on another healthy server."""
+    if reason not in BUSY_REASONS:
+        raise ValueError(
+            f"unknown BUSY reason {reason!r} (use {list(BUSY_REASONS)})")
+    return _BUSY.pack(BUSY_MAGIC, version, BUSY_REASONS[reason],
+                      int(bool(redirect)))
+
+
+def decode_busy(buf: bytes) -> Tuple[str, bool, int]:
+    """Decode a BUSY frame -> (shed reason name, redirect hint, version).
+    Too-short / wrong-magic frames raise ``ValueError`` (never
+    ``struct.error``), and an unknown shed-reason id from a newer peer
+    raises ``ValueError`` too, so the edge's recovery loop classifies it
+    as a bad frame instead of crashing on a ``KeyError``."""
+    if len(buf) < _BUSY.size or not is_busy(buf):
+        raise ValueError("bad BUSY-frame magic")
+    _, version, reason_id, redirect = _BUSY.unpack_from(buf, 0)
+    if reason_id not in BUSY_REASON_NAMES:
+        raise ValueError(f"unknown BUSY shed-reason id {reason_id}")
+    return BUSY_REASON_NAMES[reason_id], bool(redirect), version
+
+
+def is_busy(buf: bytes) -> bool:
+    """True when the frame's leading magic marks a BUSY backpressure
+    reply."""
+    return (len(buf) >= 4
+            and struct.unpack_from("<I", buf, 0)[0] == BUSY_MAGIC)
 
 
 def decode_any(buf: bytes) -> Tuple[np.ndarray, int]:

@@ -75,23 +75,29 @@ import numpy as np
 
 from repro.configs.base import CNNConfig
 from repro.core.collab.batching import (BatchingPolicy, DynamicBatcher,
-                                        next_pow2_bucket, pad_rows)
+                                        LaneSaturated, next_pow2_bucket,
+                                        pad_rows)
 from repro.core.collab.channel import (FaultInjector, LinkShaper,
                                        ShapedSocket, SimChannel,
                                        apply_send_fault, recv_exact)
+from repro.core.collab.cluster import FleetExhaustedError, FleetRouter
 from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
+                                      ServerBusy, ServerDraining,
                                       fault_record)
 from repro.core.collab.protocol import (CAP_CRC, CODEC_TX_SCALE,
                                         PROTOCOL_VERSION,
                                         FrameIntegrityError,
                                         PlanMismatchError, decode_any,
+                                        decode_busy, decode_drain,
                                         decode_heartbeat, decode_hello,
                                         decode_resplit,
                                         decode_sealed, decode_tensor,
+                                        encode_busy, encode_drain,
                                         encode_feature, encode_heartbeat,
                                         encode_hello, encode_resplit,
                                         encode_sealed, encode_tensor,
-                                        frame_lane, hello_caps, is_heartbeat,
+                                        frame_lane, hello_caps, is_busy,
+                                        is_drain, is_heartbeat,
                                         is_hello, is_resplit, is_sealed)
 from repro.core.partition.profiles import (LinkProfile, LinkTrace,
                                            TwoTierProfile)
@@ -532,7 +538,8 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 fault_policy: Optional[FaultPolicy] = None,
                 faults: Optional[FaultInjector] = None,
                 fault_stats: Optional[Dict] = None,
-                die: Optional[threading.Event] = None) -> None:
+                die: Optional[threading.Event] = None,
+                drain: Optional[threading.Event] = None) -> None:
     """Cloud-side loop: accept edge connections, answer frames.
 
     A threaded accept loop serves each connection in its own handler
@@ -610,7 +617,18 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     whole server); ``fault_stats`` (a dict) receives classified error
     counters (``reaped_conns``, ``integrity_errors``, ``conn_errors``,
     ``bad_frames``, ``writer_errors``, ``abandoned_futures``,
-    ``heartbeats``) at shutdown.
+    ``heartbeats``, ``busy_shed``, ``drain_redirects``) at shutdown.
+
+    Fleet membership: the ``drain`` event is the rolling-restart lever —
+    once set, every *new* data request is answered with a DRAIN control
+    frame instead of being served (in-flight batched work still
+    completes), telling fleet-routed edges to migrate to another member
+    mid-session with zero failed requests; ``stop`` afterwards flushes
+    and exits as usual. With a bounded batching lane
+    (``BatchingPolicy.max_queue``), a request that would overflow the
+    lane queue is answered with a BUSY backpressure frame (shed reason
+    ``"queue"``, mirroring the fleet simulator's admission vocabulary)
+    instead of stalling the connection.
     """
     bank = SplitFnBank(params, cfg, masks, compact)
     charge = None
@@ -641,6 +659,9 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     shaper = LinkShaper(link, trace=trace) if link or trace else None
     _die = die if die is not None else threading.Event()
     stats_lock = threading.Lock()
+    # signalled by every handler on exit so a max_clients-saturated
+    # accept loop wakes the instant a slot frees instead of polling
+    slot_free = threading.Event()
 
     def _count(key: str, n: int = 1) -> None:
         if fault_stats is None:
@@ -779,13 +800,31 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                     _respond_ctl(encode_resplit(want, status=0 if ok else 1))
                     rec["claimed"] = True   # control frame, not a request
                     continue
+                if drain is not None and drain.is_set():
+                    # rolling restart: stop admitting — answer DRAIN so
+                    # a fleet-routed edge migrates and replays elsewhere
+                    # (in-flight batched work still flushes via stop)
+                    _count("drain_redirects")
+                    _respond_ctl(encode_drain())
+                    rec["claimed"] = True
+                    continue
                 arr, _ = decode_any(buf)
                 rows = int(np.asarray(arr).shape[0]) if arr.ndim else 1
                 if (engine is not None and cur_split < bank.n_layers
                         and rows <= batching.max_batch):
-                    resp_q.put(("data", seq,
-                                engine.submit(cur_split, frame_lane(buf),
-                                              np.asarray(arr))))
+                    try:
+                        fut = engine.submit(cur_split, frame_lane(buf),
+                                            np.asarray(arr))
+                    except LaneSaturated:
+                        # bounded lane overflow: shed with backpressure
+                        # instead of stalling the connection — the edge
+                        # redirects to another fleet member (or backs
+                        # off) and replays the request
+                        _count("busy_shed")
+                        _respond_ctl(encode_busy("queue"))
+                        rec["claimed"] = True
+                        continue
+                    resp_q.put(("data", seq, fut))
                 else:
                     # no engine, c=N passthrough, or a frame wider than
                     # any bucket — serve it exactly like the unbatched
@@ -832,6 +871,7 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 if leaked:
                     _count("abandoned_futures", leaked)
             conn.close()
+            slot_free.set()     # wake a max_clients-saturated accept loop
 
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -864,7 +904,11 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 if claimed >= max_clients:
                     if not pending:
                         break               # budget served and drained
-                    time.sleep(0.05)        # let in-flight handlers finish
+                    # block until a handler exits (slot release is
+                    # immediate — no polling); the timeout only bounds
+                    # how long a stop/die signal waits to be noticed
+                    slot_free.wait(0.2)
+                    slot_free.clear()
                     continue
             try:
                 conn, _ = srv.accept()
@@ -933,9 +977,21 @@ class EdgeClient:
     or deadline is exhausted, ``fallback="edge"`` serves the request
     locally from the bank's c=N pair (logits bit-identical to an
     all-edge deployment). Every ``infer`` result carries the uniform
-    ``fault`` record (``{faults, retries, fallback}``); ``faults=``
-    attaches a client-side ``FaultInjector`` applied to outgoing data
-    frames (tests/benchmarks).
+    ``fault`` record (``{faults, retries, migrations, fallback}``);
+    ``faults=`` attaches a client-side ``FaultInjector`` applied to
+    outgoing data frames (tests/benchmarks).
+
+    Fleet routing (``router``): with a ``FleetRouter`` attached, every
+    (re)connect asks the router for the target server — rendezvous-
+    hashed over this client's wire *lane* key, so same-encoding edges
+    share a server and its batching lanes stay hot. Transport faults
+    feed the router's health tracking (miss-count → suspect → dead) and
+    the recovery loop reroutes to the next healthy member; a DRAIN
+    reply migrates without spending the fault budget (rolling restart),
+    a BUSY reply redirects off a saturated lane; edge-only fallback
+    engages only when no routable member remains
+    (``FleetExhaustedError``). ``sleep_fn`` makes the backoff sleeps
+    injectable (tests run recovery in milliseconds of wall-clock).
     """
 
     def __init__(self, params, cfg: CNNConfig, split: int, port: int,
@@ -946,7 +1002,9 @@ class EdgeClient:
                  plan_digest: Optional[str] = None,
                  trace: Optional[LinkTrace] = None,
                  fault_policy: Optional[FaultPolicy] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 router: Optional[FleetRouter] = None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         self._bank = SplitFnBank(params, cfg, masks, compact, pack)
         self.edge_fn, _, self._keep = self._bank.get(split)
         self.split = split
@@ -959,6 +1017,9 @@ class EdgeClient:
         self._digest = plan_digest
         self.policy = fault_policy
         self.faults = faults
+        self._router = router
+        self._avoid: Tuple[int, ...] = ()
+        self._sleep = sleep_fn
         self._rng = fault_policy.make_rng() if fault_policy else None
         self._seq = 0
         self.use_crc = False
@@ -974,12 +1035,29 @@ class EdgeClient:
         self._connect()
 
     # -- connection lifecycle ------------------------------------------------
+    def _lane(self) -> str:
+        """This client's wire-lane key (the ``protocol.frame_lane``
+        vocabulary its data frames will carry): the fleet router hashes
+        it so same-encoding edges land on one server and that server's
+        batching lanes stay hot."""
+        if self.codec is None and self._keep is None:
+            return "raw"
+        return ((self.codec or "fp32")
+                + ("+packed" if self._keep is not None else ""))
+
     def _connect(self) -> None:
         """(Re)open the cloud connection: TCP connect, arm the read
         deadline, wrap in the shaper, HELLO (advertising the CRC
         capability), and — when the session's current split has drifted
         from the plan's (the fresh cloud handler starts there) —
-        re-RESPLIT the new connection to the current split."""
+        re-RESPLIT the new connection to the current split. With a
+        fleet router attached the target (host, port) comes from the
+        router (raising ``FleetExhaustedError`` when no member is
+        routable)."""
+        if self._router is not None:
+            self._host, self._port = self._router.route(
+                self._lane(), exclude=self._avoid)
+            self._avoid = ()
         sock = socket.create_connection((self._host, self._port),
                                         timeout=self._timeout)
         # one attempt's slice of the per-request deadline is the socket
@@ -1081,12 +1159,22 @@ class EdgeClient:
         replies are CRC-checked and matched by sequence number — a stale
         reply to a superseded attempt is discarded, corruption raises
         ``FrameIntegrityError``. A read past the deadline raises
-        ``RequestTimeout``."""
+        ``RequestTimeout``. A DRAIN/BUSY control reply (never sealed)
+        raises the matching typed signal — the recovery loop migrates
+        the request to another fleet member."""
         rx, _ = _frame_io(self.sock, self.ch)
         try:
             while True:
                 (n,) = struct.unpack("<Q", rx(8))
                 buf = rx(n)
+                if is_drain(buf):
+                    decode_drain(buf)       # validates magic + version
+                    raise ServerDraining(
+                        f"server {self._host}:{self._port} is draining "
+                        f"(rolling restart)")
+                if is_busy(buf):
+                    reason, redirect, _ = decode_busy(buf)
+                    raise ServerBusy(reason=reason, redirect=redirect)
                 if is_sealed(buf):
                     rseq, buf = decode_sealed(buf)
                     if seq is not None and rseq != seq:
@@ -1183,7 +1271,7 @@ class EdgeClient:
         retry budget or the per-request deadline runs out, at which
         point the policy's fallback serves it edge-only (or re-raises).
         The ``fault`` key of the result is the uniform per-request
-        record ``{faults, retries, fallback}``."""
+        record ``{faults, retries, migrations, fallback}``."""
         rec = fault_record()
         t0 = time.perf_counter()
         x = jnp.asarray(image)
@@ -1204,12 +1292,74 @@ class EdgeClient:
                 self._send_request(seq, payload)
                 t_sent = time.perf_counter()
                 logits = self._recv_response(seq if self.use_crc else None)
+                if self._router is not None:
+                    self._router.note_ok(self._port)
                 break
             except PlanMismatchError:
                 raise                   # contract breakage is not transient
+            except FleetExhaustedError:
+                # the whole fleet is dead or draining: the bottom rung
+                # (edge-only) is the only one left
+                rec["faults"] += 1
+                self.last_fault = dict(rec)
+                if (self.policy is not None
+                        and self.policy.fallback == "edge"):
+                    return self._infer_edge_only(image, rec, t0)
+                raise
+            except ServerDraining:
+                # rolling restart, not a fault: migrate to the next
+                # healthy member and replay — the drained server is out
+                # of the ring, so this terminates within the fleet size
+                rec["migrations"] += 1
+                self._teardown()
+                if self._router is not None:
+                    self._router.note_drain(self._port)
+                    self._avoid = (self._port,)
+                    continue            # immediate migration, no backoff
+                exhausted = (self.policy is None
+                             or attempt >= self.policy.max_retries
+                             or (deadline is not None
+                                 and time.monotonic() >= deadline))
+                if exhausted:
+                    self.last_fault = dict(rec)
+                    if (self.policy is not None
+                            and self.policy.fallback == "edge"):
+                        return self._infer_edge_only(image, rec, t0)
+                    raise
+                rec["retries"] += 1
+                self._sleep(self.policy.backoff_s(attempt, self._rng))
+                attempt += 1
+            except ServerBusy as e:
+                # overload backpressure: redirect off the saturated lane
+                # when the fleet has somewhere else to go, else back off
+                # and retry (bounded by the normal retry budget)
+                rec["migrations"] += 1
+                self._teardown()
+                redirect = e.redirect and self._router is not None
+                if redirect:
+                    self._avoid = (self._port,)
+                exhausted = (self.policy is None
+                             or attempt >= self.policy.max_retries
+                             or (deadline is not None
+                                 and time.monotonic() >= deadline))
+                if exhausted:
+                    self.last_fault = dict(rec)
+                    if (self.policy is not None
+                            and self.policy.fallback == "edge"):
+                        return self._infer_edge_only(image, rec, t0)
+                    raise
+                rec["retries"] += 1
+                if not redirect:
+                    self._sleep(self.policy.backoff_s(attempt, self._rng))
+                attempt += 1
             except (FrameIntegrityError, EOFError, OSError) as e:
                 rec["faults"] += 1
                 self._teardown()
+                if self._router is not None:
+                    # feed the health tracker; prefer another member on
+                    # the next attempt (a lone member is still retried)
+                    self._router.note_miss(self._port)
+                    self._avoid = (self._port,)
                 exhausted = (self.policy is None
                              or attempt >= self.policy.max_retries
                              or (deadline is not None
@@ -1225,7 +1375,7 @@ class EdgeClient:
                 if deadline is not None:
                     pause = min(pause, max(0.0,
                                            deadline - time.monotonic()))
-                time.sleep(pause)
+                self._sleep(pause)
                 attempt += 1
         t2 = time.perf_counter()
         self.last_fault = dict(rec)

@@ -11,16 +11,16 @@ from repro.core.fleet.metrics import (FleetMetrics, RequestRecord,
 from repro.core.fleet.population import (DEVICE_CLASSES, SimEdge,
                                          build_population)
 from repro.core.fleet.scenario import (DEFAULT_SLO_CLASSES, ArrivalPattern,
-                                       FleetScenario, SLOClass)
+                                       ChaosEvent, FleetScenario, SLOClass)
 from repro.core.fleet.simulator import FleetSimulator, simulate_fleet
 from repro.core.fleet.tiers import (CLOUD_SERVER, CLOUDLET_SERVER,
                                     TierServer, TierStats, backhaul_link)
 
 __all__ = [
     "AdmissionController", "ArrivalPattern", "CLOUD_SERVER",
-    "CLOUDLET_SERVER", "DEFAULT_SLO_CLASSES", "DEVICE_CLASSES",
-    "EventQueue", "FleetMetrics", "FleetScenario", "FleetSimulator",
-    "RequestRecord", "RoutePlan", "SLOClass", "SimEdge", "SplitPlanner",
-    "TierServer", "TierStats", "backhaul_link", "build_population",
-    "percentile", "simulate_fleet",
+    "CLOUDLET_SERVER", "ChaosEvent", "DEFAULT_SLO_CLASSES",
+    "DEVICE_CLASSES", "EventQueue", "FleetMetrics", "FleetScenario",
+    "FleetSimulator", "RequestRecord", "RoutePlan", "SLOClass", "SimEdge",
+    "SplitPlanner", "TierServer", "TierStats", "backhaul_link",
+    "build_population", "percentile", "simulate_fleet",
 ]

@@ -48,9 +48,15 @@ class FleetMetrics:
     """Accumulates ``RequestRecord``s and rolls them up."""
     scenario: FleetScenario
     records: List[RequestRecord] = field(default_factory=list)
+    chaos_reroutes: int = 0
 
     def add(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    def note_reroute(self) -> None:
+        """Count one chaos reroute (a request moved off a dead or
+        draining cloudlet to another admitting one)."""
+        self.chaos_reroutes += 1
 
     # -- rollup -------------------------------------------------------------
     def rollup(self, cloudlet_stats: List[TierStats],
@@ -94,6 +100,7 @@ class FleetMetrics:
                 if served else 0.0),
             "uplink_mb_total": sum(r.tx_bytes for r in recs) / 1e6,
             "exhausted_edges": exhausted_edges,
+            "chaos_reroutes_count": self.chaos_reroutes,
         }
         # per-SLO-class attainment and tails
         by_slo: Dict[str, List[RequestRecord]] = defaultdict(list)

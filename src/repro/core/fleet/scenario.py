@@ -36,6 +36,44 @@ from repro.core.collab.faults import FaultPolicy
 #: ``repro.core.fleet.population.DEVICE_CLASSES``)
 DEVICE_CLASS_NAMES = ("mcu", "pi", "phone")
 
+#: chaos-event kinds a scenario may schedule against a cloudlet
+CHAOS_KINDS = ("kill", "drain", "revive")
+
+
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled cloudlet-tier chaos event on the virtual clock —
+    the simulator analogue of the serving stack's failover drills.
+
+    ``kind``: ``"kill"`` crashes the cloudlet (queued and in-flight
+    work is orphaned and rerouted to the next admitting cloudlet, or
+    shed when none is left); ``"drain"`` stops admission for a rolling
+    restart (queued work still flushes; new arrivals reroute);
+    ``"revive"`` puts the cloudlet back in service. ``cloudlet`` is the
+    target index (modulo the scenario's ``n_cloudlets``)."""
+    t_s: float
+    kind: str
+    cloudlet: int = 0
+
+    def __post_init__(self) -> None:
+        if self.t_s < 0:
+            raise ValueError("chaos event t_s must be >= 0")
+        if self.kind not in CHAOS_KINDS:
+            raise ValueError(f"chaos kind must be one of {CHAOS_KINDS}")
+        if self.cloudlet < 0:
+            raise ValueError("chaos event cloudlet must be >= 0")
+
+    def to_json(self) -> Dict[str, Any]:
+        """Serialize for ``plan.json`` (the digest-folded form)."""
+        return {"t_s": self.t_s, "kind": self.kind,
+                "cloudlet": self.cloudlet}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ChaosEvent":
+        """Rebuild from its ``to_json`` dict."""
+        return cls(t_s=float(d["t_s"]), kind=str(d["kind"]),
+                   cloudlet=int(d["cloudlet"]))
+
 
 @dataclass(frozen=True)
 class SLOClass:
@@ -161,7 +199,10 @@ class FleetScenario:
     ``cloudlet_batching`` / ``cloud_batching`` are the per-tier dynamic
     batching knobs; ``backhaul_mbps`` / ``backhaul_rtt_ms`` the
     cloudlet->cloud metro link; ``max_queue`` the per-cloudlet admission
-    bound (arrivals beyond it are shed at the cloudlet tier).
+    bound (arrivals beyond it are shed at the cloudlet tier);
+    ``chaos`` schedules cloudlet kill/drain/revive events on the
+    virtual clock (default none — the section serializes only when
+    set, so pre-chaos scenario digests are unchanged).
     """
     name: str
     seed: int = 0
@@ -186,6 +227,7 @@ class FleetScenario:
     backhaul_rtt_ms: float = 10.0
     max_queue: int = 128
     codec: str = "fp32"
+    chaos: Tuple[ChaosEvent, ...] = ()
 
     def __post_init__(self) -> None:
         if self.n_edges < 1 or self.n_cloudlets < 1:
@@ -217,6 +259,9 @@ class FleetScenario:
             raise ValueError("max_queue must be >= 1")
         if self.energy_weight_s_per_j < 0:
             raise ValueError("energy_weight_s_per_j must be >= 0")
+        for ev in self.chaos:
+            if not isinstance(ev, ChaosEvent):
+                raise ValueError("chaos must hold ChaosEvent entries")
 
     def battery_for(self, device_class: str) -> float:
         """The per-edge battery budget (joules) of one device class."""
@@ -224,8 +269,10 @@ class FleetScenario:
 
     def to_json(self) -> Dict[str, Any]:
         """Serialize for ``plan.json`` — the digest-folded form of the
-        plan's ``fleet`` section (keys unit-suffixed where scalar)."""
-        return {
+        plan's ``fleet`` section (keys unit-suffixed where scalar; the
+        ``chaos`` list appears only when events are scheduled, so
+        pre-chaos digests are byte-for-byte unchanged)."""
+        out = {
             "name": self.name, "seed": self.seed,
             "n_edges": self.n_edges, "n_cloudlets": self.n_cloudlets,
             "duration_s": self.duration_s,
@@ -241,6 +288,9 @@ class FleetScenario:
             "backhaul_rtt_ms": self.backhaul_rtt_ms,
             "max_queue": self.max_queue, "codec": self.codec,
         }
+        if self.chaos:
+            out["chaos"] = [ev.to_json() for ev in self.chaos]
+        return out
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "FleetScenario":
@@ -262,6 +312,8 @@ class FleetScenario:
             backhaul_mbps=float(d["backhaul_mbps"]),
             backhaul_rtt_ms=float(d["backhaul_rtt_ms"]),
             max_queue=int(d["max_queue"]), codec=str(d["codec"]),
+            chaos=tuple(ChaosEvent.from_json(ev)
+                        for ev in d.get("chaos", ())),
         )
 
     def describe(self) -> str:

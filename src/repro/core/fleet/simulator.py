@@ -21,6 +21,13 @@ for its compute, radio, and wait time; an exhausted edge sheds every
 subsequent request it originates. All timing is virtual — wall-clock
 only bounds how fast the heap drains, never what the metrics say —
 so the whole run is bit-reproducible from ``FleetScenario.seed``.
+
+Chaos (the scenario's ``chaos`` events, mirroring the serving stack's
+failover drills): a killed or draining cloudlet stops admitting, and
+requests bound for it — new arrivals and orphaned in-flight work —
+reroute to the next admitting cloudlet (counted in the rollup's
+``chaos_reroutes_count``), shedding with reason ``"queue"`` only when
+every cloudlet is gone.
 """
 from __future__ import annotations
 
@@ -86,6 +93,8 @@ class FleetSimulator:
                                 self.events,
                                 max_queue=scenario.max_queue
                                 * scenario.n_cloudlets)
+        for srv in self.cloudlets:
+            srv.on_orphan = self._reroute
         self.metrics = FleetMetrics(scenario)
 
     # -- lifecycle ----------------------------------------------------------
@@ -97,6 +106,8 @@ class FleetSimulator:
             t0 = edge.next_arrival(0.0, self.scenario.arrival)
             if t0 < self.scenario.duration_s:
                 self.events.push(t0, lambda e=edge: self._arrive(e))
+        for ev in self.scenario.chaos:
+            self.events.push(ev.t_s, lambda e=ev: self._chaos(e))
         self.events.run_until()
         return self.metrics.rollup(
             [c.stats for c in self.cloudlets], self.cloud.stats,
@@ -143,6 +154,45 @@ class FleetSimulator:
             self._to_cloud(req, self.events.now)
             return
         server = self.cloudlets[req.edge.cloudlet_id]
+        if not (server.alive and server.admitting):
+            self._reroute(req)
+            return
+        if not server.submit((plan.c1, plan.c2), req,
+                             lambda r, t: self._cloudlet_done(r, t)):
+            self._shed_inflight(req, "queue")
+
+    # -- chaos --------------------------------------------------------------
+    def _chaos(self, ev) -> None:
+        """Apply one scheduled ``ChaosEvent`` to its target cloudlet."""
+        srv = self.cloudlets[ev.cloudlet % len(self.cloudlets)]
+        if ev.kind == "kill":
+            srv.kill()
+        elif ev.kind == "drain":
+            srv.drain()
+        else:
+            srv.revive()
+
+    def _next_admitting(self, home: int):
+        """The nearest admitting cloudlet after ``home`` in ring order,
+        or None when the whole tier is down."""
+        n = len(self.cloudlets)
+        for k in range(1, n):
+            srv = self.cloudlets[(home + k) % n]
+            if srv.alive and srv.admitting:
+                return srv
+        return None
+
+    def _reroute(self, req: _Request) -> None:
+        """Move a request whose home cloudlet is dead/draining to the
+        next admitting one (the simulator analogue of the serving
+        stack's fleet reroute); shed with reason ``"queue"`` only when
+        no cloudlet admits."""
+        server = self._next_admitting(req.edge.cloudlet_id)
+        if server is None:
+            self._shed_inflight(req, "queue")
+            return
+        self.metrics.note_reroute()
+        plan = req.plan
         if not server.submit((plan.c1, plan.c2), req,
                              lambda r, t: self._cloudlet_done(r, t)):
             self._shed_inflight(req, "queue")

@@ -85,6 +85,13 @@ class TierServer:
     when the queue bound is hit (the caller sheds). Completion
     callbacks fire on the event queue, which is what chains the
     hierarchy together.
+
+    Chaos lifecycle (the scenario's ``chaos`` events): ``drain`` stops
+    admission while queued batches keep flushing (the rolling-restart
+    half of the serving stack's DRAIN frame); ``kill`` crashes the
+    server — queued and in-flight entries are handed to ``on_orphan``
+    (the simulator reroutes them to another admitting cloudlet);
+    ``revive`` puts it back in service.
     """
 
     def __init__(self, name: str, profile: ComputeProfile,
@@ -97,6 +104,13 @@ class TierServer:
         self.events = events
         self.max_queue = max_queue
         self.stats = TierStats()
+        #: chaos state: a drained server stops admitting, a killed one
+        #: is gone until revive()
+        self.admitting = True
+        self.alive = True
+        #: where orphaned entries go on kill (set by the simulator);
+        #: None silently drops them
+        self.on_orphan: Optional[Callable[[object], None]] = None
         self._lanes: Dict[Tuple[int, int], List] = {}
         self._busy = False
         self._busy_until = 0.0
@@ -133,7 +147,10 @@ class TierServer:
         ``(start, stop)``; ``done(payload, t)`` fires when its fused
         batch completes. Returns False (nothing queued) when the
         tier's queue bound is hit — the shed is the caller's to
-        account."""
+        account. A dead or draining server admits nothing (the caller
+        checks ``alive``/``admitting`` first to reroute instead)."""
+        if not (self.alive and self.admitting):
+            return False
         depth = self.pending_rows
         self.stats.queue_samples += 1
         self.stats.queue_sum += depth
@@ -179,6 +196,13 @@ class TierServer:
     def _finish(self, batch) -> None:
         self._busy = False
         now = self.events.now
+        if not self.alive:
+            # the server died while this batch was on the accelerator:
+            # its work is lost — orphan the entries for rerouting
+            for payload, _done in batch:
+                if self.on_orphan is not None:
+                    self.on_orphan(payload)
+            return
         for payload, done in batch:
             done(payload, now)
         if self._lanes and not self._start_pending:
@@ -186,3 +210,26 @@ class TierServer:
             # (matches the engine's drain-on-completion behaviour)
             self._start_pending = True
             self.events.push(now, self._start)
+
+    # -- chaos lifecycle ----------------------------------------------------
+    def drain(self) -> None:
+        """Rolling-restart drain: stop admitting; queued batches keep
+        flushing to completion."""
+        self.admitting = False
+
+    def kill(self) -> None:
+        """Crash: stop admitting, drop every queued lane entry to
+        ``on_orphan`` (in-flight batch entries follow when their modeled
+        invocation would have completed)."""
+        self.alive = False
+        self.admitting = False
+        orphans = [entry for q in self._lanes.values() for entry in q]
+        self._lanes.clear()
+        for payload, _done in orphans:
+            if self.on_orphan is not None:
+                self.on_orphan(payload)
+
+    def revive(self) -> None:
+        """Bring a drained/killed server back into service."""
+        self.alive = True
+        self.admitting = True

@@ -43,6 +43,19 @@ benchmarks comes from ``FaultSchedule``/``FaultInjector``
 serving contract and ``docs/wire-protocol.md`` for the fault-tolerant
 framing.
 
+High availability: attach ``RoutingPolicy(ports=(...), ...)`` as the
+plan's ``routing`` section to spread edges across a multi-server cloud
+fleet — ``CloudFleet`` starts one ``CloudServer`` per member port, the
+socket session's ``FleetRouter`` assigns each edge to a member by
+rendezvous hashing over its wire-lane key (batching lanes stay hot on
+one server), and the recovery ladder extends fleet-wide: a crashed
+member's edges re-route to the next healthy server (``ServerDraining``
+/ ``ServerBusy`` migrations spend no fault budget; bit-identical
+logits), a rolling drain (the DRAIN frame) migrates with zero failed
+requests, a saturated batching lane (``BatchingPolicy.max_queue``)
+answers BUSY instead of stalling, and edge-only fallback engages only
+when the whole fleet is gone (``FleetExhaustedError``).
+
 Fleet studies: attach ``FleetScenario(...)`` as the plan's ``fleet``
 section to pin the simulated deployment context — fleet size, device /
 trace mixes, SLO classes (each an ``SLOClass`` over a ``FaultPolicy``),
@@ -53,9 +66,13 @@ run it with ``simulate_fleet`` (``repro.core.fleet``); see
 from repro.core.collab.adaptive import (AdaptivePolicy,
                                         AdaptiveSplitController,
                                         BandwidthEstimator, SplitSwitch)
-from repro.core.collab.batching import BatchingPolicy, LaneStats
+from repro.core.collab.batching import (BatchingPolicy, LaneSaturated,
+                                        LaneStats)
 from repro.core.collab.channel import FaultInjector
+from repro.core.collab.cluster import (FleetExhaustedError, FleetRouter,
+                                       RoutingPolicy)
 from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
+                                      ServerBusy, ServerDraining,
                                       fault_record)
 from repro.core.collab.protocol import (FrameIntegrityError,
                                         PlanMismatchError)
@@ -69,22 +86,25 @@ from repro.core.partition.profiles import (FAULT_SCHEDULES, TRACES,
                                            FaultEvent, FaultSchedule,
                                            LinkTrace, TraceSegment)
 from repro.serving.plan import PLAN_VERSION, DeploymentPlan
-from repro.serving.session import (BACKENDS, CloudServer, InferenceSession,
-                                   LocalSession, SocketSession,
-                                   StreamingSession, connect, serve)
+from repro.serving.session import (BACKENDS, CloudFleet, CloudServer,
+                                   InferenceSession, LocalSession,
+                                   SocketSession, StreamingSession, connect,
+                                   serve)
 
 __all__ = [
     "BACKENDS", "PLAN_VERSION", "DeploymentPlan", "InferenceSession",
     "LocalSession", "SocketSession", "StreamingSession", "CloudServer",
-    "PlanMismatchError", "connect", "serve",
+    "CloudFleet", "PlanMismatchError", "connect", "serve",
     "AdaptivePolicy", "AdaptiveSplitController", "BandwidthEstimator",
     "SplitSwitch", "LinkTrace", "TraceSegment", "TRACES",
-    "BatchingPolicy", "LaneStats",
+    "BatchingPolicy", "LaneStats", "LaneSaturated",
     "EnergyPolicy", "EnergyProfile", "RadioProfile", "pareto_front",
     "ENERGY_PROFILES", "MCU_ENERGY", "PI_ENERGY", "PAPER_EDGE_ENERGY",
     "FaultPolicy", "FaultSchedule", "FaultEvent", "FaultInjector",
     "RequestTimeout", "FrameIntegrityError", "fault_record",
     "FAULT_SCHEDULES",
+    "RoutingPolicy", "FleetRouter", "FleetExhaustedError",
+    "ServerDraining", "ServerBusy",
     "ArrivalPattern", "FleetScenario", "FleetSimulator", "SLOClass",
     "simulate_fleet",
 ]

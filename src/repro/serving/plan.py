@@ -77,6 +77,19 @@ silent for ``3 * heartbeat_s``. Like the other optional sections,
 ``faults`` folds into the digest **only when set**, so pre-fault plans
 keep their digests byte-for-byte.
 
+**Fleet-routed plans**: setting ``routing=RoutingPolicy(ports=...)``
+declares the cloud tier to be a *fleet* of servers instead of one: the
+socket backend builds a ``FleetRouter`` (``repro.core.collab.cluster``)
+that rendezvous-hashes the edge's wire-lane key over the member ports
+(batching lanes stay hot on one server), tracks member health from
+transport outcomes (miss-count → suspect → dead), reroutes the recovery
+loop to the next healthy member on server death, migrates on DRAIN
+(rolling restart, zero failed requests), redirects on BUSY
+(bounded-lane backpressure), and degrades to edge-only inference only
+when the whole fleet is gone. Folded into the digest **only when set**
+(single-server plans keep their digests): both peers must agree on the
+membership for the reroute-then-replay contract to hold.
+
 **Fleet plans**: setting ``fleet=FleetScenario(...)`` attaches the
 simulated deployment context (``repro.core.fleet``) the plan is being
 evaluated for: fleet size, heterogeneous device/trace mixes, battery
@@ -105,6 +118,7 @@ from repro.checkpoint import store
 from repro.configs.base import CNNConfig, ConvLayerSpec
 from repro.core.collab.adaptive import AdaptivePolicy
 from repro.core.collab.batching import BatchingPolicy
+from repro.core.collab.cluster import RoutingPolicy
 from repro.core.collab.faults import FaultPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
 from repro.core.fleet.scenario import FleetScenario
@@ -174,6 +188,7 @@ class DeploymentPlan:
     energy: Optional[EnergyPolicy] = None
     faults: Optional[FaultPolicy] = None
     fleet: Optional[FleetScenario] = None
+    routing: Optional[RoutingPolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -271,7 +286,11 @@ class DeploymentPlan:
         (pre-fault plans keep their digests byte-for-byte): the retry /
         heartbeat / fallback contract changes how both peers behave on
         the wire — a heartbeat-reaping cloud against a non-heartbeating
-        edge would sever healthy clients — so peers must agree on it."""
+        edge would sever healthy clients — so peers must agree on it.
+        The routing section (fleet membership + health thresholds) is
+        likewise only-when-set: single-server plans keep their digests,
+        while fleet peers must agree on the member ring for the
+        reroute-then-replay contract to hold."""
         masks = None
         if self.masks:
             masks = {str(i): np.nonzero(np.asarray(m) > 0)[0].tolist()
@@ -290,6 +309,8 @@ class DeploymentPlan:
             doc["faults"] = self.faults.to_json()
         if self.fleet is not None:
             doc["fleet"] = self.fleet.to_json()
+        if self.routing is not None:
+            doc["routing"] = self.routing.to_json()
         return doc
 
     @property
@@ -326,6 +347,8 @@ class DeploymentPlan:
                           if self.faults else None),
                "fleet": (self.fleet.to_json()
                          if self.fleet else None),
+               "routing": (self.routing.to_json()
+                           if self.routing else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -356,6 +379,8 @@ class DeploymentPlan:
                   if doc.get("faults") else None)
         fleet = (FleetScenario.from_json(doc["fleet"])
                  if doc.get("fleet") else None)
+        routing = (RoutingPolicy.from_json(doc["routing"])
+                   if doc.get("routing") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -364,7 +389,7 @@ class DeploymentPlan:
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
                    batching=batching, energy=energy, faults=faults,
-                   fleet=fleet, version=doc["version"])
+                   fleet=fleet, routing=routing, version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -396,9 +421,12 @@ class DeploymentPlan:
         flt = (f", fleet={self.fleet.name}"
                f"({self.fleet.n_edges}x{self.fleet.n_cloudlets})"
                if self.fleet else "")
+        rte = (f", routed over {len(self.routing.ports)} servers"
+               if self.routing else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
-                f"({self.profile.link.name}){adapt}{batch}{joule}{tol}{flt}")
+                f"({self.profile.link.name})"
+                f"{adapt}{batch}{joule}{tol}{flt}{rte}")

@@ -18,7 +18,8 @@ Every backend returns the same result shape from ``infer`` /
 
     {"logits": np.ndarray, "t_edge": float|None, "t_upstream": float|None,
      "t_total": float|None, "tx_bytes": int|None, "e_edge_j": float|None,
-     "fault": {"faults": int, "retries": int, "fallback": bool}}
+     "fault": {"faults": int, "retries": int, "migrations": int,
+               "fallback": bool}}
 
 with uniform key semantics across the three backends: ``t_*`` are
 seconds, ``tx_bytes`` is bytes, ``e_*`` are joules. ``t_upstream`` is
@@ -57,6 +58,16 @@ control frame on the live socket). ``session.split`` is the current
 partition and ``session.switches`` the decision log. Pass a ``LinkTrace``
 via ``connect(plan, trace=...)`` (and ``serve(plan, trace=...)``) to
 replay a time-varying link.
+
+**Fleet-routed plans** (``plan.routing`` set): the socket session builds
+a ``FleetRouter`` over the plan's fleet member ports and the edge client
+routes by its wire-lane key (rendezvous hashing — one lane stays hot on
+one server). ``CloudFleet`` starts one ``CloudServer`` per member port
+and drives the chaos drills: ``kill`` (crash), ``drain`` (rolling
+restart — victims answer new requests with the DRAIN frame and edges
+migrate with zero failed requests), ``restart`` (heal back into the
+ring). When every member is gone the edge degrades to the bit-identical
+edge-only fallback, exactly as for a single-server cloud death.
 """
 from __future__ import annotations
 
@@ -69,6 +80,7 @@ from repro.core.collab.adaptive import (AdaptiveSplitController,
                                         SplitSwitch)
 from repro.core.collab.batching import bucket_for
 from repro.core.collab.channel import FaultInjector
+from repro.core.collab.cluster import FleetRouter
 from repro.core.collab.faults import fault_record
 from repro.core.collab.protocol import PlanMismatchError  # re-export  # noqa: F401
 from repro.core.collab.runtime import (CollabRunner, EdgeClient,
@@ -95,8 +107,8 @@ def _result(logits, t_edge: Optional[float], t_upstream: Optional[float],
             fault: Optional[Dict] = None) -> Dict:
     """The one result shape every backend returns: ``t_*`` seconds,
     ``tx_bytes`` bytes, ``e_edge_j`` joules (None = unattributable or
-    un-metered), ``fault`` the uniform ``{faults, retries, fallback}``
-    accounting (all-zero when the backend reports none)."""
+    un-metered), ``fault`` the uniform ``{faults, retries, migrations,
+    fallback}`` accounting (all-zero when the backend reports none)."""
     total = (None if t_edge is None or t_upstream is None
              else t_edge + t_upstream)
     return {"logits": np.asarray(logits), "t_edge": t_edge,
@@ -237,15 +249,29 @@ class SocketSession(InferenceSession):
     the RESPLIT frame — same connection, no re-handshake. ``resplit``
     forces a switch manually. A ``trace`` shapes the edge's uplink
     against a time-varying link (pair it with ``serve(plan, trace=...)``
-    for the downlink)."""
+    for the downlink).
+
+    With a fleet-routed plan (``plan.routing`` set) the session builds a
+    ``FleetRouter`` over the fleet member ports (or adopts a shared one
+    passed as ``router``) and the client picks its server per connect by
+    lane key; ``session.router`` exposes the health/reroute stats.
+    ``sleep_fn`` replaces the retry-backoff sleep (tests inject a no-op
+    to run failover drills in milliseconds)."""
 
     backend = "socket"
 
     def __init__(self, plan: DeploymentPlan, *, verify: bool = True,
                  host: Optional[str] = None, port: Optional[int] = None,
                  trace: Optional[LinkTrace] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 router: Optional[FleetRouter] = None,
+                 sleep_fn=None):
         super().__init__(plan)
+        if router is None and plan.routing is not None:
+            router = FleetRouter(plan.routing, host=host or plan.host)
+        #: the fleet router steering this session's connects (None on a
+        #: single-server plan) — shared health state if passed in
+        self.router = router
         self._client = EdgeClient(
             plan.params, plan.cfg, plan.split, port or plan.port,
             masks=plan.masks,
@@ -253,7 +279,8 @@ class SocketSession(InferenceSession):
             compact=plan.compact, codec=plan.codec, pack=plan.pack,
             host=host or plan.host, timeout=plan.connect_timeout_s,
             plan_digest=plan.digest if verify else None, trace=trace,
-            fault_policy=plan.faults, faults=faults)
+            fault_policy=plan.faults, faults=faults, router=router,
+            **({"sleep_fn": sleep_fn} if sleep_fn is not None else {}))
         self._controller = _controller_for(plan)
         if self._controller is not None:
             # pre-jit the edge half of every candidate (the cloud peer
@@ -304,6 +331,10 @@ class SocketSession(InferenceSession):
                     self.switches.append(sw)
             else:
                 sw = self._controller.step(res["tx_bytes"], res["t_tx"], e)
+                if sw is None and rec and rec["migrations"]:
+                    # fleet backpressure: let the controller answer the
+                    # congestion signal without waiting out the dwell
+                    sw = self._controller.note_congestion()
                 if sw is not None:
                     self._client.resplit(sw.new_split)
                     self.split = sw.new_split
@@ -412,7 +443,8 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
           simulate_server=None,
           faults: Optional[FaultInjector] = None,
           fault_stats: Optional[Dict] = None,
-          die: Optional[threading.Event] = None) -> None:
+          die: Optional[threading.Event] = None,
+          drain: Optional[threading.Event] = None) -> None:
     """Cloud-side entry point: serve ``plan`` on its link endpoint
     (blocking). ``max_clients=None`` + a ``stop`` event serves many edges
     until told to quit; ``verify`` arms the HELLO digest check. An
@@ -435,7 +467,12 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
     injects the schedule into the server's response path; ``fault_stats``
     (a dict) receives classified error counts on shutdown; ``die`` is
     the crash switch — setting it kills every connection without drain
-    (what ``CloudServer.kill`` uses to simulate cloud death)."""
+    (what ``CloudServer.kill`` uses to simulate cloud death); ``drain``
+    is the rolling-restart switch — while set, new data requests are
+    answered with the versioned DRAIN control frame (fleet-routed edges
+    migrate to another member, zero failed requests) while handshakes
+    and in-flight work still complete (what ``CloudServer.drain``
+    sets)."""
     serve_cloud(plan.params, plan.cfg, plan.split, port or plan.port,
                 masks=plan.masks,
                 link=plan.profile.link if plan.shape_link else None,
@@ -448,7 +485,7 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
                 trace=trace, batching=plan.batching,
                 batch_stats=batch_stats, simulate_server=simulate_server,
                 fault_policy=plan.faults, faults=faults,
-                fault_stats=fault_stats, die=die)
+                fault_stats=fault_stats, die=die, drain=drain)
 
 
 class CloudServer:
@@ -474,6 +511,7 @@ class CloudServer:
         self.fault_stats: Dict = {}
         self._stop = threading.Event()
         self._die = threading.Event()
+        self._drain = threading.Event()
         ready = threading.Event()
         self._thread = threading.Thread(
             target=serve, args=(plan,),
@@ -482,7 +520,8 @@ class CloudServer:
                         stop=self._stop, verify=verify, trace=trace,
                         batch_stats=self.batch_stats,
                         simulate_server=simulate_server, faults=faults,
-                        fault_stats=self.fault_stats, die=self._die),
+                        fault_stats=self.fault_stats, die=self._die,
+                        drain=self._drain),
             daemon=True)
         self._thread.start()
         if not ready.wait(start_timeout):
@@ -494,6 +533,20 @@ class CloudServer:
         listener exits; fills ``batch_stats`` when the plan batches."""
         self._stop.set()
         self._thread.join(timeout)
+
+    def drain(self) -> None:
+        """Start a rolling-restart drain: stop admitting new data
+        requests — each gets the DRAIN control frame so fleet-routed
+        edges migrate to another member — while handshakes and in-flight
+        batched work still complete. Returns immediately; call ``stop``
+        once the edges have moved (``CloudFleet.restart`` sequences
+        this)."""
+        self._drain.set()
+
+    @property
+    def draining(self) -> bool:
+        """True once a rolling-restart drain has been started."""
+        return self._drain.is_set()
 
     def kill(self, timeout: float = 10.0) -> None:
         """Simulated cloud death: hard-close every connection (no drain,
@@ -518,3 +571,93 @@ class CloudServer:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+
+class CloudFleet:
+    """The high-availability cloud tier: one background ``CloudServer``
+    per fleet member port in ``plan.routing``, plus the chaos controls
+    the failover drills drive — ``kill`` (crash a member), ``drain``
+    (rolling restart: the member answers new requests with DRAIN and
+    fleet-routed edges migrate with zero failed requests), ``restart``
+    (heal a member back into the ring).
+
+    >>> with CloudFleet(plan) as fleet:
+    ...     sess = connect(plan, backend="socket")   # routes by lane
+    ...     fleet.kill(plan.routing.ports[0])        # edges re-route
+    """
+
+    def __init__(self, plan: DeploymentPlan, *, verify: bool = True,
+                 max_clients: Optional[int] = None,
+                 simulate_server=None, start_timeout: float = 10.0):
+        if plan.routing is None or not plan.routing.ports:
+            raise ValueError(
+                "CloudFleet needs a plan with a routing section "
+                "(fleet member ports)")
+        self.plan = plan
+        self._verify = verify
+        self._max_clients = max_clients
+        self._simulate_server = simulate_server
+        self._start_timeout = start_timeout
+        self._lock = threading.Lock()
+        self._servers: Dict[int, CloudServer] = {}
+        for p in plan.routing.ports:
+            self._servers[p] = self._spawn(p)
+
+    def _spawn(self, port: int) -> CloudServer:
+        return CloudServer(
+            self.plan, port=port, max_clients=self._max_clients,
+            verify=self._verify, simulate_server=self._simulate_server,
+            start_timeout=self._start_timeout)
+
+    @property
+    def ports(self) -> tuple:
+        """The fleet member ports (the plan's routing section)."""
+        return self.plan.routing.ports
+
+    def server(self, port: int) -> CloudServer:
+        """The current ``CloudServer`` for one member port."""
+        with self._lock:
+            return self._servers[port]
+
+    def kill(self, port: int, timeout: float = 10.0) -> None:
+        """Crash one member: hard-close its connections (no drain, no
+        goodbye). Fleet-routed edges see the reset, mark the member
+        dead, and re-route the replayed request to the next healthy
+        server."""
+        self.server(port).kill(timeout)
+
+    def drain(self, port: int) -> None:
+        """Start a rolling-restart drain on one member (see
+        ``CloudServer.drain``); returns immediately while edges
+        migrate."""
+        self.server(port).drain()
+
+    def stop(self, port: int, timeout: float = 10.0) -> None:
+        """Gracefully stop one member (in-flight work flushes)."""
+        self.server(port).stop(timeout)
+
+    def restart(self, port: int, timeout: float = 10.0) -> CloudServer:
+        """Bring a killed/drained member back: stop whatever is left on
+        the port and start a fresh ``CloudServer`` there. The routers'
+        dead-member probe (``retry_dead_s``) heals it back into the
+        ring; a drill can also call ``router.revive(port)`` directly."""
+        old = self.server(port)
+        if old.alive:
+            old.stop(timeout)
+        srv = self._spawn(port)
+        with self._lock:
+            self._servers[port] = srv
+        return srv
+
+    def stop_all(self, timeout: float = 10.0) -> None:
+        """Gracefully stop every member of the fleet."""
+        with self._lock:
+            servers = list(self._servers.values())
+        for srv in servers:
+            srv.stop(timeout)
+
+    def __enter__(self) -> "CloudFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop_all()

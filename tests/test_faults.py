@@ -162,7 +162,8 @@ def test_socket_session_negotiates_crc(plan_setup):
             assert sess._client.use_crc          # both peers advertised
             res = sess.infer(x)
     np.testing.assert_allclose(res["logits"], want, rtol=1e-4, atol=1e-4)
-    assert res["fault"] == {"faults": 0, "retries": 0, "fallback": False}
+    assert res["fault"] == {"faults": 0, "retries": 0, "migrations": 0,
+                            "fallback": False}
 
 
 def test_legacy_no_crc_peer_interoperates(plan_setup):
@@ -350,7 +351,7 @@ def test_outage_resplits_to_edge_and_heals_back(plan_setup):
             assert healed["fault"]["fallback"] is False
             again = sess.infer(x)                    # healthy observation in
             assert again["fault"] == {"faults": 0, "retries": 0,
-                                      "fallback": False}
+                                      "migrations": 0, "fallback": False}
             assert sess.split == SPLIT               # healed back
             np.testing.assert_allclose(again["logits"], want,
                                        rtol=1e-4, atol=1e-4)

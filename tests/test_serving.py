@@ -131,7 +131,7 @@ def test_three_backends_bit_identical_logits(plan_setup):
         assert res["e_edge_j"] is None     # un-metered plan: no joules
         # uniform fault accounting: all-zero on a clean request
         assert res["fault"] == {"faults": 0, "retries": 0,
-                                "fallback": False}
+                                "migrations": 0, "fallback": False}
 
 
 def test_streaming_backend_reports_pipeline_stats(plan_setup):
