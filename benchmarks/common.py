@@ -145,6 +145,27 @@ def write_failover_record(failover: Dict) -> str:
     return save_result("BENCH_failover", rec)
 
 
+def write_kernels_record(kernel_edge: Dict) -> str:
+    """The tracked quantized-kernel-edge record, ``BENCH_kernels.json``:
+    the three edge wall-clock numbers at the deploy split (fp32 dense /
+    compacted kernel fp32 / compacted int8 kernel, batch-1 ms), the
+    int8-vs-dense speedup and top-1 delta, the Pallas/ref parity bit,
+    the calibrated split, the MCU/Pi fc memory shares and the edge
+    weight footprint at both widths. Written by
+    ``benchmarks.kernel_edge`` run with ``--json``/``--smoke`` (the CI
+    path) or by ``benchmarks.run --json``; CI uploads it next to the
+    other BENCH records. (The raw Pallas micro-sweep from
+    ``kernels_bench`` lives in ``BENCH_kernels_micro.json``.)"""
+    rec = {k: kernel_edge[k] for k in (
+        "split", "fp32_dense_edge_ms", "kernel_fp32_edge_ms",
+        "int8_kernel_edge_ms", "int8_speedup_vs_dense", "top1_fp32",
+        "top1_int8", "top1_delta_points", "bit_identical_pallas_ref",
+        "calibrated_split", "mcu_fc_memory_share_min",
+        "pi_fc_memory_share_min", "edge_weight_bytes_fp32",
+        "edge_weight_bytes_int8")}
+    return save_result("BENCH_kernels", rec)
+
+
 def write_fleet_record(fleet_sim: Dict) -> str:
     """The tracked fleet-simulation record, ``BENCH_fleet.json``: the
     headline scenario's full rollup (fleet p50/p99, joules/request,

@@ -107,7 +107,7 @@ def run(fast: bool = False) -> dict:
                 "time, BlockSpec VMEM claim"))
     assert all(r["max_err"] < 1e-2 for r in rows)
     out = {"rows": rows}
-    save_result("kernels", out)
+    save_result("kernels_micro", out)
     return out
 
 

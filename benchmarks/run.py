@@ -12,11 +12,12 @@ import traceback
 
 from benchmarks import (adaptive_split, cloud_batching, collab_throughput,
                         energy_split, fault_injection, fig4_layerwise,
-                        fig5_methods, fleet_sim, kernels_bench,
-                        roofline_report, table1_accuracy,
+                        fig5_methods, fleet_sim, kernel_edge,
+                        kernels_bench, roofline_report, table1_accuracy,
                         table2_split_latency)
 from benchmarks.common import (write_collab_record, write_energy_record,
-                               write_faults_record, write_fleet_record)
+                               write_faults_record, write_fleet_record,
+                               write_kernels_record)
 
 BENCHES = [
     ("table2_split_latency", table2_split_latency.run),
@@ -28,7 +29,8 @@ BENCHES = [
     ("energy_split", energy_split.run),
     ("fault_injection", fault_injection.run),
     ("fleet_sim", fleet_sim.run),
-    ("kernels", kernels_bench.run),
+    ("kernels_micro", kernels_bench.run),
+    ("kernel_edge", kernel_edge.run),
     ("table1_accuracy", table1_accuracy.run),
     ("roofline", roofline_report.run),
 ]
@@ -70,6 +72,9 @@ def main() -> None:
               f"{write_faults_record(results['fault_injection'])}")
     if args.json and "fleet_sim" in results:
         print(f"perf record: {write_fleet_record(results['fleet_sim'])}")
+    if args.json and "kernel_edge" in results:
+        print("perf record: "
+              f"{write_kernels_record(results['kernel_edge'])}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
     print("\nall benchmarks passed")

@@ -160,6 +160,7 @@ UNIT_SUFFIX_CLASSES: Dict[str, Tuple[str, ...]] = {
     "core/partition/energy_model.py": ("EnergyPolicy", "EnergyProfile"),
     "core/fleet/scenario.py": ("FleetScenario", "SLOClass",
                                "ArrivalPattern", "ChaosEvent"),
+    "core/collab/quant.py": ("QuantPolicy",),
 }
 
 #: the DeploymentPlan optional sections under the fold-only-when-set rule
@@ -167,7 +168,7 @@ PLAN_PATH = "serving/plan.py"
 PLAN_CLASS = "DeploymentPlan"
 PLAN_METHOD = "contract"
 PLAN_SECTIONS: Tuple[str, ...] = ("adaptive", "batching", "energy",
-                                  "faults", "fleet", "routing")
+                                  "faults", "fleet", "quant", "routing")
 
 #: the wire codec whose pack formats need unpack twins
 PROTOCOL_PATH = "core/collab/protocol.py"

@@ -178,6 +178,27 @@ def decode_tensor(buf: bytes) -> Tuple[np.ndarray, int]:
 # ---------------------------------------------------------------------------
 # feature codec (fp16 / int8 quantization + mask-aware channel packing)
 # ---------------------------------------------------------------------------
+def affine_qparams(mn: float, mx: float, levels: int) -> Tuple[float, float]:
+    """Affine (scale, zero) mapping [mn, mx] onto the code points
+    {0..levels}: dequant(q) = q * scale + zero. A degenerate range
+    (mx == mn) gets scale 1.0 so round-tripping stays exact."""
+    scale = (mx - mn) / float(levels) or 1.0
+    return scale, mn
+
+
+def affine_quantize(x: np.ndarray,
+                    levels: int = 255) -> Tuple[np.ndarray, float, float]:
+    """Min/max affine quantization onto uint8 code points {0..levels}
+    -> (codes, scale, zero), with max-abs-error <= scale/2. This is the
+    wire codec's int8 math (levels=255); the quantized edge path reuses
+    it per weight channel (and with levels=15 for int4)."""
+    mn = float(x.min()) if x.size else 0.0
+    mx = float(x.max()) if x.size else 0.0
+    scale, zero = affine_qparams(mn, mx, levels)
+    q = np.clip(np.rint((x - zero) / scale), 0, levels).astype(np.uint8)
+    return q, scale, zero
+
+
 def encode_feature(arr: np.ndarray, codec: str = "fp32",
                    keep: Optional[np.ndarray] = None) -> bytes:
     """Encode an intermediate-feature tensor for the wire.
@@ -200,12 +221,8 @@ def encode_feature(arr: np.ndarray, codec: str = "fp32",
     if codec == "fp16":
         payload_arr = x.astype(np.float16)
     elif codec == "int8":
-        mn = float(x.min()) if x.size else 0.0
-        mx = float(x.max()) if x.size else 0.0
-        scale = (mx - mn) / 255.0 or 1.0
-        q = np.rint((x - mn) / scale)
-        payload_arr = np.clip(q, 0, 255).astype(np.uint8)
-        extra = struct.pack("<ff", scale, mn)
+        payload_arr, scale, zero = affine_quantize(x, levels=255)
+        extra = struct.pack("<ff", scale, zero)
     else:
         payload_arr = x
     payload = payload_arr.tobytes()

@@ -160,11 +160,24 @@ class SplitFnBank:
     """
 
     def __init__(self, params, cfg: CNNConfig, masks=None,
-                 compact: bool = False, pack: bool = False):
+                 compact: bool = False, pack: bool = False, quant=None):
         (self.dparams, self.deploy_cfg,
          self.dmasks) = deploy_submodels(params, cfg, masks, compact)
         self.pack = pack
         self.compact = compact
+        #: optional ``QuantPolicy`` — when set, the EDGE closure of every
+        #: split dispatches conv/dense through the masked-GEMM kernel
+        #: over (possibly int8/int4-quantized) deployed weights; cloud
+        #: halves stay fp32 dense (the server is not the device the
+        #: paper quantizes for). Resolved eagerly so bank construction
+        #: owns all quant state and the closures stay read-only.
+        self.quant = quant
+        if quant is not None:
+            from repro.core.collab.quant import (quantize_params,
+                                                 resolve_backend)
+            self._qparams = quantize_params(self.dparams, self.deploy_cfg,
+                                            quant)
+            self._q_backend, self._q_interpret = resolve_backend(quant)
         self.n_layers = len(self.deploy_cfg.layers)
         self._fns: Dict[int, Tuple] = {}
         self._batched_fns: Dict[int, Tuple] = {}
@@ -180,10 +193,20 @@ class SplitFnBank:
     def _build(self, split: int) -> Tuple:
         dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
 
-        def _edge(x):
-            self.n_traces += 1          # runs at trace time only
-            return cnn_apply(dparams, dcfg, x, masks=dmasks,
-                             stop_layer=split)
+        if self.quant is not None:
+            from repro.core.collab.quant import quant_cnn_apply
+            qp, qb, qi = self._qparams, self._q_backend, self._q_interpret
+
+            def _edge(x):
+                self.n_traces += 1      # runs at trace time only
+                return quant_cnn_apply(qp, dcfg, x, masks=dmasks,
+                                       stop_layer=split, backend=qb,
+                                       interpret=qi)
+        else:
+            def _edge(x):
+                self.n_traces += 1      # runs at trace time only
+                return cnn_apply(dparams, dcfg, x, masks=dmasks,
+                                 stop_layer=split)
 
         def _cloud(x):
             self.n_traces += 1          # runs at trace time only
@@ -206,10 +229,20 @@ class SplitFnBank:
         """
         dparams, dcfg, dmasks = self.dparams, self.deploy_cfg, self.dmasks
 
-        def _edge_row(row):
-            self.n_traces += 1          # runs at trace time only
-            return cnn_apply(dparams, dcfg, row[None], masks=dmasks,
-                             stop_layer=split)[0]
+        if self.quant is not None:
+            from repro.core.collab.quant import quant_cnn_apply
+            qp, qb, qi = self._qparams, self._q_backend, self._q_interpret
+
+            def _edge_row(row):
+                self.n_traces += 1      # runs at trace time only
+                return quant_cnn_apply(qp, dcfg, row[None], masks=dmasks,
+                                       stop_layer=split, backend=qb,
+                                       interpret=qi)[0]
+        else:
+            def _edge_row(row):
+                self.n_traces += 1      # runs at trace time only
+                return cnn_apply(dparams, dcfg, row[None], masks=dmasks,
+                                 stop_layer=split)[0]
 
         def _cloud_row(row):
             self.n_traces += 1          # runs at trace time only
@@ -294,11 +327,11 @@ def _warm_input(cfg: CNNConfig) -> np.ndarray:
 
 
 def build_split_fns(params, cfg: CNNConfig, split: int, masks=None,
-                    compact: bool = False, pack: bool = False):
+                    compact: bool = False, pack: bool = False, quant=None):
     """One-stop deployment resolution shared by every executor: returns
     (edge_fn, cloud_fn, keep, deploy_cfg) for the given split (one-shot
     wrapper over ``SplitFnBank``)."""
-    bank = SplitFnBank(params, cfg, masks, compact, pack)
+    bank = SplitFnBank(params, cfg, masks, compact, pack, quant=quant)
     edge_fn, cloud_fn, keep = bank.get(split)
     return edge_fn, cloud_fn, keep, bank.deploy_cfg
 
@@ -318,7 +351,8 @@ class CollabRunner:
                  simulate_compute: bool = True,
                  compact: bool = False, codec: Optional[str] = None,
                  pack: bool = False, trace: Optional[LinkTrace] = None,
-                 energy=None, faults: Optional[FaultInjector] = None):
+                 energy=None, faults: Optional[FaultInjector] = None,
+                 quant=None):
         self.cfg = cfg
         self.split = split
         self.profile = profile
@@ -333,7 +367,8 @@ class CollabRunner:
         #: carries ``e_edge_j`` (joules) priced from the same breakdown
         #: the timing reports (one formula for analytic and measured)
         self.energy = energy
-        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack,
+                                 quant=quant)
         self.deploy_cfg = self._bank.deploy_cfg
         self.set_split(split)
 
@@ -539,7 +574,8 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
                 faults: Optional[FaultInjector] = None,
                 fault_stats: Optional[Dict] = None,
                 die: Optional[threading.Event] = None,
-                drain: Optional[threading.Event] = None) -> None:
+                drain: Optional[threading.Event] = None,
+                quant=None) -> None:
     """Cloud-side loop: accept edge connections, answer frames.
 
     A threaded accept loop serves each connection in its own handler
@@ -630,7 +666,7 @@ def serve_cloud(params, cfg: CNNConfig, split: int, port: int,
     ``"queue"``, mirroring the fleet simulator's admission vocabulary)
     instead of stalling the connection.
     """
-    bank = SplitFnBank(params, cfg, masks, compact)
+    bank = SplitFnBank(params, cfg, masks, compact, quant=quant)
     charge = None
     if simulate_server is not None:
         from repro.core.partition.latency_model import (
@@ -1004,8 +1040,10 @@ class EdgeClient:
                  fault_policy: Optional[FaultPolicy] = None,
                  faults: Optional[FaultInjector] = None,
                  router: Optional[FleetRouter] = None,
-                 sleep_fn: Callable[[float], None] = time.sleep):
-        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 quant=None):
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack,
+                                 quant=quant)
         self.edge_fn, _, self._keep = self._bank.get(split)
         self.split = split
         self._plan_split = split      # the split a fresh cloud handler is at

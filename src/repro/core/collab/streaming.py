@@ -86,14 +86,15 @@ class StreamingCollabRunner:
                  compact: bool = False, codec: Optional[str] = None,
                  pack: bool = False, queue_depth: int = 4,
                  microbatch: int = 1, realtime_channel: bool = True,
-                 trace=None):
+                 trace=None, quant=None):
         self.split = split
         self.microbatch = max(1, microbatch)
         self.queue_depth = max(1, queue_depth)
         self.channel = SimChannel(profile.link, realtime=realtime_channel,
                                   trace=trace)
         self.codec = codec
-        self._bank = SplitFnBank(params, cfg, masks, compact, pack)
+        self._bank = SplitFnBank(params, cfg, masks, compact, pack,
+                                 quant=quant)
         self._edge_fn, self._cloud_fn, self._keep = self._bank.get(split)
         self.deploy_cfg = self._bank.deploy_cfg
 

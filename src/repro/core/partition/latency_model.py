@@ -107,6 +107,23 @@ def compacted_cnn_layer_costs(cfg: CNNConfig, masks,
                            bytes_per_elem=bytes_per_elem)
 
 
+def quantized_cnn_layer_costs(cfg: CNNConfig, masks=None,
+                              weight_bits: Optional[int] = 8,
+                              bytes_per_elem: int = 4) -> List[LayerCost]:
+    """Price the *quantized* deployed network: compacted shapes with
+    ``params_bytes`` scaled to the quantized weight width — the traffic
+    the int8/int4 edge actually streams from flash per inference. FLOPs
+    and activation bytes are unchanged (weight-only quantization keeps
+    fp32 activations). ``weight_bits=None`` prices the fp32 kernel
+    path (identical to ``compacted_cnn_layer_costs``)."""
+    costs = compacted_cnn_layer_costs(cfg, masks, bytes_per_elem)
+    if weight_bits is None:
+        return costs
+    frac = weight_bits / (8.0 * bytes_per_elem)
+    return [LayerCost(c.index, c.name, c.flops, c.out_bytes,
+                      c.params_bytes * frac) for c in costs]
+
+
 # ---------------------------------------------------------------------------
 # analytic costs: transformer (per decoder layer, batch=1)
 # ---------------------------------------------------------------------------
@@ -175,6 +192,42 @@ def measure_cnn_layer_times(params, cfg: CNNConfig, x,
         times.append((time.perf_counter() - t0) / repeats)
         cur = out
     return times
+
+
+@dataclass(frozen=True)
+class KernelCalibration:
+    """Measured per-layer edge seconds — the kernel-cost calibration hook
+    of the split model. ``measure`` times any per-layer forward (fp32
+    dense, kernel-dispatched, quantized — the caller passes the jitted
+    layer callables, e.g. from ``repro.core.collab.quant
+    .calibrate_quant_edge``), and ``layer_s`` plugs into
+    ``split_latency`` / ``sweep_splits`` / ``energy_aware_split`` as
+    ``measured_device_s``, so the sweep picks splits on the deployed
+    kernels' real costs instead of the analytic roofline."""
+    layer_s: tuple
+
+    @classmethod
+    def measure(cls, layer_fns: Sequence, x0,
+                repeats: int = 3) -> "KernelCalibration":
+        """``layer_fns[i]`` maps layer i's input to its output (jitted by
+        the caller so the repeat loop times execution, not tracing);
+        outputs thread forward so each layer is timed on its real input."""
+        times = []
+        cur = x0
+        for fn in layer_fns:
+            out = fn(cur)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(fn(cur))
+            times.append(float((time.perf_counter() - t0) / repeats))
+            cur = out
+        return cls(tuple(times))
+
+    def total_s(self, split: Optional[int] = None) -> float:
+        """Measured device seconds for layers [0, split) (all when None)."""
+        n = len(self.layer_s) if split is None else split
+        return float(sum(self.layer_s[:n]))
 
 
 def cnn_layer_output_bytes(params, cfg: CNNConfig, x, masks=None) -> List[int]:

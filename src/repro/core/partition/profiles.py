@@ -38,9 +38,18 @@ from typing import Optional, Tuple
 @dataclass(frozen=True)
 class ComputeProfile:
     name: str
-    flops_per_s: float          # sustained
+    flops_per_s: float          # sustained fp32
     mem_bw: float               # bytes/s
     overhead_s: float = 0.0     # per-invocation constant (kernel launch etc.)
+    #: sustained int8 MAC throughput (ops/s) for quantized-kernel
+    #: roofline pricing; None -> the 4x-fp32 SIMD default
+    #: (``int8_ops_per_s``). Edge CPUs gain far more than 4x when their
+    #: fp32 path is soft-float (MCU class), so the edge profiles pin it.
+    int8_flops_per_s: Optional[float] = None
+
+    @property
+    def int8_ops_per_s(self) -> float:
+        return self.int8_flops_per_s or 4.0 * self.flops_per_s
 
 
 @dataclass(frozen=True)
@@ -173,11 +182,16 @@ PAPER_FARM_PROFILE = TwoTierProfile(PAPER_EDGE, PAPER_SERVER_BATCHED,
 #: MCU-class edge (Cortex-M/ESP32 class): reproduces the paper's
 #: AlexNet@224-vs-i7 regime — a split optimum that genuinely moves with
 #: the link — at benchmark scale.
+#: int8 at 8x fp32: the MCU's fp32 path is soft-float while int8 MACs
+#: ride the SIMD/DSP extensions (the CMSIS-NN regime)
 MCU_EDGE = ComputeProfile("MCU-class edge", flops_per_s=0.15e9,
-                          mem_bw=0.5e9, overhead_s=3e-4)
-#: Pi-class single-board edge (quad A72 class, NEON fp32)
+                          mem_bw=0.5e9, overhead_s=3e-4,
+                          int8_flops_per_s=1.2e9)
+#: Pi-class single-board edge (quad A72 class, NEON fp32; int8 dot
+#: product units give the NEON path ~4x fp32)
 PI_EDGE = ComputeProfile("Pi-class edge", flops_per_s=6e9,
-                         mem_bw=4e9, overhead_s=2.5e-4)
+                         mem_bw=4e9, overhead_s=2.5e-4,
+                         int8_flops_per_s=24e9)
 #: Phone-class edge (mid-range smartphone, big.LITTLE A7x SoC).
 #: Calibration: sustained fp32 CNN inference on the CPU/NEON path of a
 #: 2020s mid-ranger lands at a few tens of GFLOP/s (thermally throttled

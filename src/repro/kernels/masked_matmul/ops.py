@@ -30,6 +30,11 @@ def masked_matmul(a: jnp.ndarray, b: jnp.ndarray, col_mask: jnp.ndarray,
     M = 1
     for s in lead:
         M *= s
+    if M == 0 or N == 0 or K == 0:
+        # Degenerate dims never reach the kernel: an empty M or N yields an
+        # empty output, and K == 0 is an empty contraction — exact zeros,
+        # matching masked_matmul_ref (zeros * mask == zeros).
+        return jnp.zeros((*lead, N), a.dtype)
     a2 = a.reshape(M, K)
     bm = min(block_m, max(M, 1))
     bn = min(block_n, N)

@@ -76,6 +76,7 @@ from repro.core.collab.faults import (FaultPolicy, RequestTimeout,
                                       fault_record)
 from repro.core.collab.protocol import (FrameIntegrityError,
                                         PlanMismatchError)
+from repro.core.collab.quant import QuantPolicy
 from repro.core.fleet import (ArrivalPattern, FleetScenario, FleetSimulator,
                               SLOClass, simulate_fleet)
 from repro.core.partition.energy_model import (ENERGY_PROFILES, MCU_ENERGY,
@@ -104,7 +105,7 @@ __all__ = [
     "RequestTimeout", "FrameIntegrityError", "fault_record",
     "FAULT_SCHEDULES",
     "RoutingPolicy", "FleetRouter", "FleetExhaustedError",
-    "ServerDraining", "ServerBusy",
+    "ServerDraining", "ServerBusy", "QuantPolicy",
     "ArrivalPattern", "FleetScenario", "FleetSimulator", "SLOClass",
     "simulate_fleet",
 ]

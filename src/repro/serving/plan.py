@@ -100,6 +100,19 @@ sections: a plan exported *for* a specific fleet study pins that
 scenario in its contract (so two artifacts claiming the same study are
 comparable), while plans without one keep their digests byte-for-byte.
 
+**Quantized-edge plans**: setting ``quant=QuantPolicy(...)`` switches
+the EDGE submodel's conv/dense layers onto the masked-GEMM kernel path
+(``repro.core.collab.quant``): the deployed (post-compaction) weights
+are affine-quantized per output channel to int8/int4 (or kept fp32
+with ``weight_bits=None`` — kernel dispatch only), and every
+``SplitFnBank`` edge closure — across all three backends, every
+candidate split, the batched row-mapped variants, and the edge-only
+fault fallback — runs the quantized kernel forward while cloud halves
+stay fp32 dense. Folded into the digest **only when set** (un-quantized
+plans keep their digests byte-for-byte): the edge's numerics are part
+of what both peers deploy and compare golden logits against. See
+``docs/quantized-edge.md`` for the error-bound and dispatch contracts.
+
 Serve a plan through ``repro.serving.connect`` (see ``session.py``).
 """
 from __future__ import annotations
@@ -121,6 +134,7 @@ from repro.core.collab.batching import BatchingPolicy
 from repro.core.collab.cluster import RoutingPolicy
 from repro.core.collab.faults import FaultPolicy
 from repro.core.collab.protocol import CODEC_TX_SCALE
+from repro.core.collab.quant import QuantPolicy
 from repro.core.fleet.scenario import FleetScenario
 from repro.core.partition.energy_model import EnergyPolicy
 from repro.core.partition.latency_model import (cnn_input_bytes,
@@ -189,6 +203,7 @@ class DeploymentPlan:
     faults: Optional[FaultPolicy] = None
     fleet: Optional[FleetScenario] = None
     routing: Optional[RoutingPolicy] = None
+    quant: Optional[QuantPolicy] = None
     version: int = PLAN_VERSION
 
     def __post_init__(self) -> None:
@@ -311,6 +326,8 @@ class DeploymentPlan:
             doc["fleet"] = self.fleet.to_json()
         if self.routing is not None:
             doc["routing"] = self.routing.to_json()
+        if self.quant is not None:
+            doc["quant"] = self.quant.to_json()
         return doc
 
     @property
@@ -349,6 +366,8 @@ class DeploymentPlan:
                          if self.fleet else None),
                "routing": (self.routing.to_json()
                            if self.routing else None),
+               "quant": (self.quant.to_json()
+                         if self.quant else None),
                "has_masks": bool(self.masks)}
         with open(os.path.join(path, "plan.json"), "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
@@ -381,6 +400,8 @@ class DeploymentPlan:
                  if doc.get("fleet") else None)
         routing = (RoutingPolicy.from_json(doc["routing"])
                    if doc.get("routing") else None)
+        quant = (QuantPolicy.from_json(doc["quant"])
+                 if doc.get("quant") else None)
         plan = cls(cfg=cfg, params=params, split=doc["split"], masks=masks,
                    compact=doc["compact"], codec=doc["codec"],
                    pack=doc["pack"],
@@ -389,7 +410,8 @@ class DeploymentPlan:
                    connect_timeout_s=link["connect_timeout_s"],
                    shape_link=link["shape_link"], adaptive=adaptive,
                    batching=batching, energy=energy, faults=faults,
-                   fleet=fleet, routing=routing, version=doc["version"])
+                   fleet=fleet, routing=routing, quant=quant,
+                   version=doc["version"])
         if plan.digest != doc["digest"]:
             raise ValueError(
                 f"plan digest mismatch after load: stored {doc['digest']}, "
@@ -423,10 +445,11 @@ class DeploymentPlan:
                if self.fleet else "")
         rte = (f", routed over {len(self.routing.ports)} servers"
                if self.routing else "")
+        qnt = (f", quant={self.quant.describe()}" if self.quant else "")
         return (f"DeploymentPlan[{self.digest}] {self.cfg.name}: "
                 f"split c={self.split}/{n}, {prune}, "
                 f"compact={self.compact}, codec={self.codec}"
                 f"{'+packed' if self.pack and not self.compact else ''}, "
                 f"link={self.host}:{self.port} "
                 f"({self.profile.link.name})"
-                f"{adapt}{batch}{joule}{tol}{flt}{rte}")
+                f"{adapt}{batch}{joule}{tol}{flt}{rte}{qnt}")

@@ -176,7 +176,7 @@ class LocalSession(InferenceSession):
             simulate_compute=simulate_compute, compact=plan.compact,
             codec=plan.codec, pack=plan.pack, trace=trace,
             energy=plan.energy.profile if plan.energy else None,
-            faults=faults)
+            faults=faults, quant=plan.quant)
         self._controller = _controller_for(plan)
         if self._controller is not None:
             # pre-jit every candidate so a switch doesn't stall a request
@@ -280,6 +280,7 @@ class SocketSession(InferenceSession):
             host=host or plan.host, timeout=plan.connect_timeout_s,
             plan_digest=plan.digest if verify else None, trace=trace,
             fault_policy=plan.faults, faults=faults, router=router,
+            quant=plan.quant,
             **({"sleep_fn": sleep_fn} if sleep_fn is not None else {}))
         self._controller = _controller_for(plan)
         if self._controller is not None:
@@ -381,7 +382,8 @@ class StreamingSession(InferenceSession):
             plan.params, plan.cfg, plan.split, plan.profile,
             masks=plan.masks, compact=plan.compact, codec=plan.codec,
             pack=plan.pack, queue_depth=queue_depth, microbatch=microbatch,
-            realtime_channel=realtime_channel, trace=trace)
+            realtime_channel=realtime_channel, trace=trace,
+            quant=plan.quant)
         self.last_report: Optional[StreamReport] = None
 
     def infer(self, image: np.ndarray) -> Dict:
@@ -485,7 +487,8 @@ def serve(plan: DeploymentPlan, *, port: Optional[int] = None,
                 trace=trace, batching=plan.batching,
                 batch_stats=batch_stats, simulate_server=simulate_server,
                 fault_policy=plan.faults, faults=faults,
-                fault_stats=fault_stats, die=die, drain=drain)
+                fault_stats=fault_stats, die=die, drain=drain,
+                quant=plan.quant)
 
 
 class CloudServer:

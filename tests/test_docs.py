@@ -27,7 +27,8 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_PAGES = ["docs/architecture.md", "docs/wire-protocol.md",
              "docs/deployment-plan.md", "docs/benchmarks.md",
-             "docs/fleet-sim.md", "docs/static-analysis.md"]
+             "docs/fleet-sim.md", "docs/static-analysis.md",
+             "docs/quantized-edge.md"]
 #: generated artifacts (gitignored): referenced by the docs but not
 #: present in a fresh checkout
 GENERATED_PREFIXES = ("experiments/",)

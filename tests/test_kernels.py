@@ -72,6 +72,46 @@ def test_masked_matmul_pruned_columns_exact_zero():
     assert (out[:, 1::2] == 0.0).all()
 
 
+@pytest.mark.parametrize("M,K,N", [(0, 4, 5), (3, 0, 5), (3, 4, 0),
+                                   (1, 1, 1)])
+def test_masked_matmul_degenerate_dims(M, K, N):
+    """Empty M/N and the empty contraction (K=0) return exact zeros of
+    the right shape instead of reaching the kernel (or dividing by a
+    zero grid)."""
+    a = jnp.zeros((M, K)) + 1.0
+    b = jnp.zeros((K, N)) + 2.0
+    m = jnp.ones((N,))
+    got = masked_matmul(a, b, m, interpret=True)
+    want = masked_matmul_ref(a, b, m)
+    assert got.shape == want.shape == (M, N)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("M,K,N", [(1, 7, 5), (1, 200, 3), (2, 3, 130),
+                                   (5, 300, 2)])
+def test_masked_matmul_dims_smaller_than_block(M, K, N):
+    """M=1 rows and K/N far below the default 128 blocks exercise the
+    padding path: ops.py clamps each block to the dim, so the pad rows/
+    cols the kernel sees are zeros that cannot leak into the output."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    m = (jax.random.uniform(jax.random.PRNGKey(2), (N,)) > 0.3).astype(
+        jnp.float32)
+    got = masked_matmul(a, b, m, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(masked_matmul_ref(a, b, m)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_masked_matmul_all_pruned_mask_exact_zero():
+    """A fully pruned column mask (every channel dropped) zeroes the
+    whole output exactly — the epilogue multiply, not an approximation."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (16, 24))
+    b = jax.random.normal(jax.random.PRNGKey(1), (24, 40))
+    out = np.asarray(masked_matmul(a, b, jnp.zeros((40,)), interpret=True))
+    assert (out == 0.0).all()
+
+
 def test_masked_matmul_batched_leading_dims():
     a = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 24))
     b = jax.random.normal(jax.random.PRNGKey(1), (24, 16))
